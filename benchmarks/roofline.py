@@ -1,0 +1,238 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Roofline analysis per (arch x shape) cell on the single-pod 16x16 mesh.
+
+XLA's cost model counts while-loop bodies ONCE (verified empirically), so the
+production compile (scan-over-layers, grad-accum scan, q-block scan)
+undercounts FLOPs/bytes/collectives.  This module therefore measures
+*unrolled shallow* variants and extrapolates:
+
+    C(L) = a + (L/period) * c        (depth finite-difference)
+
+* layers unrolled at L in {period, 2*period}; attention q-block scan
+  unrolled (attn_q_block = seq_len); microbatch loop unrolled.
+* train cells add an (L1, M=2-unrolled) compile: per-microbatch *weight*
+  re-gathers (FSDP all-gathers are batch-size independent) scale with M,
+  activation-proportional collectives do not — measured directly as
+  w = coll(L1,M2) - coll(L1,M1).
+
+Conventions (SPMD modules carry per-partition shapes):
+* ``flops``/``bytes`` from cost_analysis are **per-device** values;
+* collective ``link_bytes`` (repro.dist.hlo_analysis) is per-device link
+  traffic with ring factors applied.
+Terms (seconds, per device == per step on the critical path):
+    compute   = flops / 197e12        (bf16 peak per v5e chip)
+    memory    = bytes / 819e9         (HBM bw; HLO bytes-accessed is an
+                                       upper-ish proxy — fused ops re-count)
+    collective= link_bytes / 50e9     (per-link ICI)
+
+Known caveat (documented in EXPERIMENTS.md): the two recurrent archs keep a
+time-step scan in the HLO even in analysis mode; their compute/memory terms
+take the analytic model (exact closed forms), collectives are measured
+(no collectives inside the time scan).
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.dist.hlo_analysis import (analytic_hbm_bytes,
+                                     analytic_model_flops, collective_stats)
+from repro.dist.sharding import build_rules, use_mesh
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import batch_specs, decode_specs
+from repro.models import lm
+from repro.models.config import cell_applicable, standard_shapes
+from repro.optim.adamw import AdamW, cosine_schedule
+from repro.train.step import make_train_step
+
+ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "roofline"
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_SCAN_TIME_ARCHS = {"xlstm-125m"}   # time-step scan stays in the HLO
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _analysis_cfg(cfg, n_layers, shape):
+    qb = min(shape.seq_len, 32768)
+    return dataclasses.replace(
+        cfg, n_layers=n_layers, scan_layers=False, attn_q_block=qb)
+
+
+def _measure(cfg, shape, mesh, *, microbatches=1):
+    """Lower+compile one analysis variant; returns per-device metrics."""
+    rules = build_rules(mesh, kv_heads=cfg.n_kv_heads,
+                        n_experts=cfg.n_experts, step=shape.kind,
+                        seq_parallel=cfg.seq_parallel,
+                        expert_parallel=cfg.expert_parallel)
+    aparams = lm.abstract_params(cfg)
+    pspecs = lm.param_pspecs(cfg, rules)
+    with use_mesh(mesh, rules):
+        if shape.kind == "train":
+            opt = AdamW(state_dtype=cfg.opt_state_dtype)
+            fn = make_train_step(cfg, opt, cosine_schedule(3e-4, 10, 100),
+                                 microbatches=microbatches,
+                                 unroll_accum=True)
+            aopt = jax.eval_shape(opt.init, aparams)
+            ospecs = type(aopt)(m=pspecs, v=pspecs, count=P())
+            bspecs, baxes = batch_specs(cfg, shape)
+            bshard = {k: rules.spec(baxes[k], bspecs[k].shape) for k in baxes}
+            jfn = jax.jit(fn, in_shardings=(
+                _ns(mesh, pspecs), _ns(mesh, ospecs),
+                NamedSharding(mesh, P()), _ns(mesh, bshard)),
+                donate_argnums=(0, 1))
+            args = (aparams, aopt, jax.ShapeDtypeStruct((), jax.numpy.int32),
+                    bspecs)
+        elif shape.kind == "prefill":
+            bspecs, baxes = batch_specs(cfg, shape)
+            bshard = {k: rules.spec(baxes[k], bspecs[k].shape) for k in baxes}
+            acache = lm.abstract_cache(cfg, shape.global_batch,
+                                       shape.seq_len)
+            cspecs = lm.cache_pspecs(cfg, shape.global_batch, shape.seq_len,
+                                     rules)
+            jfn = jax.jit(lambda p, b, c: lm.prefill(p, cfg, b, c),
+                          in_shardings=(_ns(mesh, pspecs),
+                                        _ns(mesh, bshard),
+                                        _ns(mesh, cspecs)),
+                          donate_argnums=(2,))
+            args = (aparams, bspecs, acache)
+        else:
+            tokens, lengths, acache, _ = decode_specs(cfg, shape)
+            cspecs = lm.cache_pspecs(cfg, shape.global_batch, shape.seq_len,
+                                     rules)
+            jfn = jax.jit(lambda p, t, l, c: lm.decode_step(p, cfg, t, l, c),
+                          in_shardings=(
+                              _ns(mesh, pspecs),
+                              NamedSharding(mesh, rules.spec(
+                                  ("batch", "seq"), tokens.shape)),
+                              NamedSharding(mesh, rules.spec(
+                                  ("batch",), lengths.shape)),
+                              _ns(mesh, cspecs)),
+                          donate_argnums=(3,))
+            args = (aparams, tokens, lengths, acache)
+        compiled = jfn.lower(*args).compile()
+        cost = compiled.cost_analysis()
+        coll = collective_stats(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "link_bytes": coll["total"]["link_bytes"],
+            "coll_ops": coll["ops"]}
+
+
+def analyze_cell(arch: str, shape_name: str, force=False) -> dict:
+    cell = f"{arch}__{shape_name}"
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    out_path = ARTIFACTS / f"{cell}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    cfg, meta = registry.get(arch)
+    shape = standard_shapes(meta.train_microbatches)[shape_name]
+    rec = {"cell": cell, "arch": arch, "shape": shape_name, "ok": False}
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        rec.update(skipped=True, reason=why, ok=True)
+        out_path.write_text(json.dumps(rec, indent=1))
+        return rec
+
+    try:
+        t0 = time.time()
+        mesh = make_production_mesh(multi_pod=False)
+        period = len(cfg.block_pattern)
+        l1, l2 = period, 2 * period
+        m1 = _measure(_analysis_cfg(cfg, l1, shape), shape, mesh)
+        m2 = _measure(_analysis_cfg(cfg, l2, shape), shape, mesh)
+        per_layer = {k: (m2[k] - m1[k]) / period for k in
+                     ("flops", "bytes", "link_bytes")}
+        base = {k: m1[k] - per_layer[k] * period for k in per_layer}
+        totals = {k: base[k] + per_layer[k] * cfg.n_layers for k in per_layer}
+
+        micro_w = 0.0
+        m_full = shape.microbatches if shape.kind == "train" else 1
+        if shape.kind == "train" and m_full > 1:
+            mm = _measure(_analysis_cfg(cfg, l1, shape), shape, mesh,
+                          microbatches=2)
+            # per-microbatch weight re-gather traffic for l1 layers
+            micro_w = max(mm["link_bytes"] - m1["link_bytes"], 0.0) / period
+            totals["link_bytes"] += micro_w * cfg.n_layers * (m_full - 1)
+
+        model_flops = analytic_model_flops(cfg, shape)   # global
+        n_dev = 256
+        hlo_flops = totals["flops"]
+        if arch in _SCAN_TIME_ARCHS:
+            # time-scan body counted once: take the analytic per-device value
+            hlo_flops = model_flops / n_dev
+        hbm_bytes = analytic_hbm_bytes(cfg, shape)
+        t_compute = hlo_flops / PEAK_FLOPS
+        t_memory = hbm_bytes / HBM_BW
+        t_coll = totals["link_bytes"] / LINK_BW
+        dominant = max((t_compute, "compute"), (t_memory, "memory"),
+                       (t_coll, "collective"))[1]
+        useful = model_flops / max(hlo_flops * n_dev, 1.0)
+        rec.update(
+            ok=True, analyze_s=round(time.time() - t0, 1),
+            per_layer=per_layer, base=base, totals=totals,
+            micro_weight_link_bytes=micro_w,
+            microbatches=m_full,
+            model_flops=model_flops,
+            hlo_flops_per_dev=hlo_flops,
+            hbm_bytes_per_dev=hbm_bytes,
+            hlo_bytes_accessed_per_dev=totals["bytes"],
+            t_compute_s=t_compute, t_memory_s=t_memory,
+            t_collective_s=t_coll, dominant=dominant,
+            useful_ratio=useful,
+            roofline_fraction=t_compute / max(t_compute, t_memory, t_coll),
+        )
+    except Exception as e:
+        rec.update(ok=False, error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-1500:])
+    out_path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    archs = [args.arch] if args.arch else [a.replace("_", "-")
+                                           for a in registry.ARCHS]
+    shapes = [args.shape] if args.shape else list(standard_shapes())
+    fails = 0
+    for arch in archs:
+        for shape in shapes:
+            rec = analyze_cell(arch, shape, force=args.force)
+            tag = "SKIP" if rec.get("skipped") else (
+                "ok" if rec["ok"] else "FAIL")
+            fails += 0 if rec["ok"] else 1
+            if rec.get("skipped"):
+                print(f"[SKIP] {rec['cell']}", flush=True)
+            elif rec["ok"]:
+                print(f"[ok  ] {rec['cell']:45s} dom={rec['dominant']:10s} "
+                      f"comp={rec['t_compute_s']*1e3:8.2f}ms "
+                      f"mem={rec['t_memory_s']*1e3:8.2f}ms "
+                      f"coll={rec['t_collective_s']*1e3:8.2f}ms "
+                      f"useful={rec['useful_ratio']:.2f}", flush=True)
+            else:
+                print(f"[FAIL] {rec['cell']}: {rec.get('error')}", flush=True)
+    raise SystemExit(1 if fails else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Reproduce the paper's core figures on the JAX discrete-event simulator.
+
+    PYTHONPATH=src python examples/lock_microbench.py
+
+Prints Figure-1-style scaling (MCS collapse, TAS latency collapse) and the
+Figure-8b SLO sweep (LibASL throughput grows with the SLO while the little-
+core P99 tracks the SLO line).
+"""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import jax                                  # noqa: E402
+import numpy as np                          # noqa: E402
+
+from repro.core import simlock as sl        # noqa: E402
+
+
+def figure1():
+    print("== Figure 1: scaling 1..8 threads (4 big + 4 little) ==")
+    print(f"{'n':>2} {'MCS tput':>10} {'MCS p99':>9} {'TAS tput':>10} "
+          f"{'TAS p99':>9}")
+    for n in range(1, 9):
+        big = tuple([1] * min(n, 4) + [0] * max(n - 4, 0))
+        kw = dict(n_cores=n, big=big,
+                  speed_cs=tuple(1.0 if b else 3.75 for b in big),
+                  speed_nc=tuple(1.0 if b else 1.8 for b in big),
+                  sim_time_us=40_000.0)
+        mcs_cfg = sl.SimConfig(policy="fifo", **kw)
+        mcs = sl.summarize(mcs_cfg, sl.run(mcs_cfg, 1e9))
+        tas_cfg = sl.SimConfig(policy="tas", w_big=0.15, **kw)
+        tas = sl.summarize(tas_cfg, sl.run(tas_cfg, 1e9))
+        print(f"{n:>2} {mcs['throughput_cs_per_s']:>10.0f} "
+              f"{mcs['cs_p99_all_us']:>8.1f}u "
+              f"{tas['throughput_cs_per_s']:>10.0f} "
+              f"{tas['cs_p99_all_us']:>8.1f}u")
+
+
+def figure8b():
+    print("\n== Figure 8b: LibASL SLO sweep (one jax.vmap) ==")
+    cfg = sl.SimConfig(policy="libasl", sim_time_us=50_000.0)
+    slos = [20., 40., 60., 80., 100., 150., 200.]
+    st = sl.sweep_slo(cfg, slos)
+    print(f"{'SLO us':>7} {'tput':>9} {'little p99':>11} {'big p99':>9}")
+    for i, slo in enumerate(slos):
+        s = sl.summarize(cfg, jax.tree.map(lambda x: x[i], st))
+        print(f"{slo:>7.0f} {s['throughput_cs_per_s']:>9.0f} "
+              f"{s['ep_p99_little_us']:>10.1f}u "
+              f"{s['ep_p99_big_us']:>8.1f}u")
+
+
+def main():
+    figure1()
+    figure8b()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Bounded-staleness straggler mitigation — the paper's lock ordering
+applied to gradient commits.
+
+    PYTHONPATH=src python examples/straggler_training.py
+
+Simulates an 8-pod data-parallel job with transient stragglers (10% of
+steps take 5x: preemptions, ECC retries, network blips) and compares
+synchronous training, unbounded async, and the AIMD-windowed policy.
+Then runs a REAL 2-worker demonstration: two Trainer instances sharing a
+BoundedStalenessController, one artificially slowed.
+"""
+
+import pathlib
+import sys
+import tempfile
+import threading
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.configs import registry                              # noqa: E402
+from repro.dist.staleness import (BoundedStalenessController,   # noqa: E402
+                                  simulate)
+from repro.train.trainer import Trainer, TrainerConfig          # noqa: E402
+
+
+def main():
+    print("== simulation: 8 pods, 10% of steps straggle 5x ==")
+    kw = dict(straggle_prob=0.1, straggle_factor=5.0, seed=11,
+              horizon_steps=300)
+    for name, ctl, extra in (
+            ("synchronous", BoundedStalenessController(
+                8, window_steps=0.0, max_window=0.0), {}),
+            ("unbounded-async", BoundedStalenessController(
+                8, window_steps=1e6, max_window=1e6),
+             dict(quality_slo=float("inf"))),
+            ("asl-window(AIMD)", BoundedStalenessController(
+                8, window_steps=4.0, max_window=8.0),
+             dict(quality_slo=6.0, penalty_per_stale=1.0))):
+        sps, mean_st, p99_st = simulate(8, [1.0] * 8, controller=ctl,
+                                        **kw, **extra)
+        print(f"  {name:18s} steps/s={sps:6.2f}  staleness "
+              f"mean={mean_st:4.1f} p99={p99_st:4.0f}")
+
+    print("\n== live demo: 2 trainers, one slowed, shared window ==")
+    cfg = registry.get_tiny("gemma_7b")
+    ctl = BoundedStalenessController(2, window_steps=2.0, max_window=4.0)
+    results = {}
+
+    def worker(pod, slow):
+        with tempfile.TemporaryDirectory() as d:
+            t = Trainer(cfg, TrainerConfig(
+                total_steps=12, ckpt_every=100, ckpt_dir=d,
+                global_batch=4, seq_len=32, seed=pod))
+            params, opt_state, step = t.init_or_restore()
+            import jax
+            step_j = jax.numpy.int32(0)
+            while step < 12:
+                while not ctl.can_commit(pod):
+                    time.sleep(0.005)
+                if slow:
+                    time.sleep(0.05)
+                batch = t.data.batch(step)
+                params, opt_state, step_j, m = t.step_fn(
+                    params, opt_state, step_j,
+                    jax.tree.map(jax.numpy.asarray, batch))
+                step += 1
+                ctl.commit(pod)
+            results[pod] = float(m["loss"])
+
+    ts = [threading.Thread(target=worker, args=(0, False)),
+          threading.Thread(target=worker, args=(1, True))]
+    t0 = time.time()
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    print(f"  both pods finished 12 steps in {time.time()-t0:.1f}s, "
+          f"staleness stayed <= {ctl.window}; losses {results}")
+
+
+if __name__ == "__main__":
+    main()

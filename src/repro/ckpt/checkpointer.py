@@ -1,0 +1,150 @@
+"""Fault-tolerant checkpointing: atomic sharded save, resharding restore.
+
+* **Atomic**: writes into ``step_XXXX.tmp/`` then ``os.rename`` — a crash
+  mid-save never corrupts the latest checkpoint; restore scans for the
+  newest complete directory (rename is the commit point).
+* **Sharded**: each leaf is saved as a raw ``.npy``; on a multi-host pod
+  each host writes only the leaves (or leaf shards) it owns — here
+  single-process, the layout is the same, keyed by flattened tree paths.
+* **Resharding restore**: ``restore`` takes the *target* abstract tree and
+  shardings; arrays are loaded host-side and ``jax.device_put`` against the
+  new mesh, so a 2-pod checkpoint restarts on 1 pod (elastic downscale) and
+  vice versa — the elastic-restart test exercises exactly that.
+* The manager thread and keep-policy GC are guarded by the paper's LibASL
+  mutex (saves are little-core/standby work; the training step's metadata
+  read is the latency-critical path).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.core.libasl import LibASL
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def _leaf_names(tree):
+    paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return ["_".join(re.sub(r"[^A-Za-z0-9_]", "", str(k)) for k in path)
+            or f"leaf{i}" for i, (path, _) in enumerate(paths)]
+
+
+def save(directory, step: int, tree) -> Path:
+    d = Path(directory)
+    d.mkdir(parents=True, exist_ok=True)
+    tmp = d / f"step_{step}.tmp"
+    final = d / f"step_{step}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    names = _leaf_names(tree)
+    leaves, _ = _flatten(tree)
+    manifest = {"step": step, "leaves": []}
+    for name, leaf in zip(names, leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        np.save(tmp / f"{name}.npy", arr)
+        manifest["leaves"].append(
+            {"name": name, "shape": list(arr.shape), "dtype": str(arr.dtype)})
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)           # commit point
+    return final
+
+
+def latest_step(directory) -> int | None:
+    d = Path(directory)
+    if not d.exists():
+        return None
+    steps = [int(m.group(1)) for p in d.iterdir()
+             if (m := _STEP_RE.match(p.name)) and (p / "manifest.json").exists()]
+    return max(steps) if steps else None
+
+
+def restore(directory, step: int, target_tree, shardings=None):
+    """Load into the *target* structure; device_put against new shardings."""
+    d = Path(directory) / f"step_{step}"
+    names = _leaf_names(target_tree)
+    leaves, treedef = _flatten(target_tree)
+    shard_leaves = (jax.tree.flatten(shardings)[0] if shardings is not None
+                    else [None] * len(leaves))
+    out = []
+    for name, tgt, sh in zip(names, leaves, shard_leaves):
+        arr = np.load(d / f"{name}.npy")
+        want_shape = tuple(tgt.shape)
+        assert arr.shape == want_shape, (name, arr.shape, want_shape)
+        arr = arr.astype(tgt.dtype)
+        out.append(jax.device_put(arr, sh) if sh is not None
+                   else jax.device_put(arr))
+    return jax.tree.unflatten(treedef, out)
+
+
+class CheckpointManager:
+    """Keep-policy + async save thread + crash-safe latest()."""
+
+    def __init__(self, directory, keep: int = 3, save_async: bool = True):
+        self.dir = Path(directory)
+        self.keep = keep
+        self._async = save_async
+        self._asl = LibASL(is_big_core=lambda: not _in_saver())
+        self._mu = self._asl.mutex()
+        self._pending: threading.Thread | None = None
+
+    def save(self, step: int, tree):
+        tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        if self._async:
+            self.wait()
+            t = threading.Thread(target=self._do_save, args=(step, tree),
+                                 daemon=True)
+            self._pending = t
+            t.start()
+        else:
+            self._do_save(step, tree)
+
+    def _do_save(self, step, tree):
+        _SAVER.flag = True
+        with self._mu:
+            save(self.dir, step, tree)
+            self._gc()
+
+    def _gc(self):
+        steps = sorted(
+            int(m.group(1)) for p in self.dir.iterdir()
+            if (m := _STEP_RE.match(p.name)))
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def latest(self) -> int | None:
+        with self._mu:
+            return latest_step(self.dir)
+
+    def restore(self, step, target_tree, shardings=None):
+        self.wait()
+        with self._mu:
+            return restore(self.dir, step, target_tree, shardings)
+
+
+_SAVER = threading.local()
+
+
+def _in_saver() -> bool:
+    return getattr(_SAVER, "flag", False)

@@ -1,0 +1,29 @@
+"""hubert-xlarge [audio] — arXiv:2106.07447 (unverified tier).
+
+48L d_model=1280 16H (kv=16) head_dim=80 d_ff=5120 vocab=504 (k-means
+units); encoder-only (bidirectional, no decode step).  The wav2vec2-style
+conv frontend is a stub: ``input_specs`` supplies precomputed frame
+embeddings [B, S, d_model].
+"""
+
+from repro.configs.registry import ArchMeta
+from repro.models.config import ModelConfig
+
+META = ArchMeta(train_microbatches=1, source="arXiv:2106.07447")
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="hubert-xlarge", family="audio",
+        n_layers=48, d_model=1280, n_heads=16, n_kv_heads=16, head_dim=80,
+        d_ff=5120, vocab=504, activation="gelu", causal=False,
+        frontend="audio_stub",
+    )
+
+
+def tiny() -> ModelConfig:
+    return ModelConfig(
+        name="hubert-tiny", family="audio",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=128, vocab=97, activation="gelu", causal=False,
+        frontend="audio_stub", dtype="float32")

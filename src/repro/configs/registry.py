@@ -1,0 +1,52 @@
+"""Architecture registry: ``get(arch_id)`` -> (ModelConfig, ArchMeta).
+
+One module per assigned architecture lives next to this file; each exports
+``config()`` (the exact published configuration), ``tiny()`` (a reduced
+same-family config for CPU smoke tests) and ``META`` (per-arch run
+parameters: train microbatch count etc.).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchMeta:
+    train_microbatches: int = 1      # grad-accumulation steps at train_4k
+    source: str = ""
+
+
+ARCHS = [
+    "llava_next_mistral_7b",
+    "grok_1_314b",
+    "phi35_moe_42b",
+    "recurrentgemma_2b",
+    "gemma_7b",
+    "yi_6b",
+    "llama3_405b",
+    "qwen15_110b",
+    "xlstm_125m",
+    "hubert_xlarge",
+]
+
+# CLI ids (dashes) -> module names
+ALIASES = {a.replace("_", "-"): a for a in ARCHS}
+
+
+def _mod(arch: str):
+    arch = ALIASES.get(arch, arch)
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ALIASES)}")
+    return importlib.import_module(f"repro.configs.{arch}")
+
+
+def get(arch: str):
+    m = _mod(arch)
+    return m.config(), m.META
+
+
+def get_tiny(arch: str):
+    m = _mod(arch)
+    return m.tiny()

@@ -1,0 +1,23 @@
+"""The paper's contribution: asymmetry-aware SLO-guided lock ordering.
+
+* :mod:`repro.core.aimd`         — Algorithm 2 (AIMD reorder window), host + jnp.
+* :mod:`repro.core.locks`        — FIFO/TAS/ticket/proportional baselines.
+* :mod:`repro.core.reorderable`  — Algorithm 1 (reorderable lock).
+* :mod:`repro.core.libasl`       — Algorithms 2+3 (epoch API, ASL mutex).
+* :mod:`repro.core.simlock`      — JAX discrete-event AMP simulator (figures).
+* :mod:`repro.core.asl_schedule` — the lock ordering as an engine-slot
+  admission policy (serving / straggler mitigation).
+"""
+
+from repro.core.aimd import AIMDWindow, aimd_update
+from repro.core.asl_schedule import (ASLScheduler, FIFOScheduler,
+                                     GreedyScheduler, SCHEDULERS)
+from repro.core.libasl import ASLMutex, LibASL
+from repro.core.locks import FIFOLock, ProportionalLock, TASLock, TicketLock
+from repro.core.reorderable import ReorderableLock
+
+__all__ = [
+    "AIMDWindow", "aimd_update", "ASLScheduler", "FIFOScheduler",
+    "GreedyScheduler", "SCHEDULERS", "ASLMutex", "LibASL", "FIFOLock",
+    "ProportionalLock", "TASLock", "TicketLock", "ReorderableLock",
+]

@@ -1,0 +1,62 @@
+"""AIMD reorder-window controller — Algorithm 2 of the paper, exactly.
+
+The controller maps a coarse-grained latency SLO onto a fine-grained reorder
+window: on an SLO violation the window halves (exponential reduction) and the
+additive unit is recomputed as ``window * (100 - PCT) / 100``; every epoch end
+adds one unit (linear growth).  With PCT=99 this makes the post-recovery
+violation probability ~1% (paper footnote 4), i.e. the P99 latency "barely
+meets" the SLO.
+
+Two implementations share the same constants:
+
+* :class:`AIMDWindow` — host-side (used by the threaded LibASL mutex, the
+  serving admission scheduler and the bounded-staleness controller).
+* :func:`aimd_update` — pure-jnp functional form (used by the JAX
+  discrete-event lock simulator; shape-polymorphic so it can be vmapped).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+# Paper defaults. Units are nanoseconds in the paper; the controller is
+# unit-agnostic (the simulator uses microseconds, the serving engine seconds).
+DEFAULT_WINDOW = 1_000.0
+DEFAULT_UNIT = 10.0
+MAX_WINDOW = 100_000_000.0  # paper: 100ms upper bound => starvation-free
+MIN_WINDOW = 0.0
+
+
+@dataclasses.dataclass
+class AIMDWindow:
+    """Per-(thread, epoch-id) reorder window state (paper Algorithm 2).
+
+    ``update()`` is called at ``epoch_end`` with the measured epoch latency
+    and its SLO; returns the new window.
+    """
+
+    window: float = DEFAULT_WINDOW
+    unit: float = DEFAULT_UNIT
+    pct: float = 99.0
+    max_window: float = MAX_WINDOW
+
+    def update(self, latency: float, slo: float) -> float:
+        if latency > slo:
+            # Exponential reduction (paper line 25-26).
+            self.window = self.window / 2.0
+            self.unit = self.window * (100.0 - self.pct) / 100.0
+        # Linear growth, applied unconditionally (paper line 28).
+        self.window = min(self.window + self.unit, self.max_window)
+        self.window = max(self.window, MIN_WINDOW)
+        return self.window
+
+
+def aimd_update(window, unit, latency, slo, *, pct=99.0, max_window=MAX_WINDOW):
+    """Functional Algorithm 2 step. All args may be jnp arrays (vmap-safe)."""
+    violated = latency > slo
+    w = jnp.where(violated, window * 0.5, window)
+    u = jnp.where(violated, w * (100.0 - pct) / 100.0, unit)
+    w = jnp.clip(w + u, MIN_WINDOW, max_window)
+    return w, u

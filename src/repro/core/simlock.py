@@ -1,0 +1,503 @@
+"""Discrete-event AMP lock simulator — the paper's experiments as a JAX module.
+
+This container has one CPU core, so the paper's wall-clock experiments on
+asymmetric silicon cannot be re-run directly.  Instead we reproduce them on a
+deterministic discrete-event simulation of an AMP: ``N`` cores with per-core
+speed factors run (non-critical section → acquire → critical section →
+release) loops against ``L`` shared locks under a pluggable lock policy.
+
+The simulator is a single ``jax.lax.while_loop`` over integer event time
+(ticks of 10 ns), so an SLO sweep (paper Figure 8b) is one ``jax.vmap`` and a
+whole figure is one jitted call.  All paper baselines are modeled:
+
+* ``fifo``    — MCS-equivalent strict FIFO handoff (Implication 1 baseline).
+* ``tas``     — test-and-set with an *asymmetric success rate*: the winner
+                among spinners at release is drawn with weight ``w_big`` for
+                big cores (w_big>1 = big-core-affinity, <1 = little-core-
+                affinity; paper Figure 3b/3c).
+* ``prop``    — static proportional policy (ShflLock-PB analogue, Figure 5):
+                1 little-core grant after every ``prop_n`` big-core grants.
+* ``libasl``  — the paper: big cores enqueue immediately; little cores stand
+                by for an AIMD-controlled reorder window (Algorithms 1-3).
+
+Event model (one pending event per core):
+  NONCRIT end  → acquire attempt (policy-specific)
+  STANDBY end  → reorder window expired → enqueue FIFO
+  HOLDER end   → release: record latencies, advance epoch, pick next holder
+QUEUED / SPIN cores carry t_ready=INF and are woken by the releaser.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Phases
+NONCRIT, STANDBY, QUEUED, HOLDER, SPIN = 0, 1, 2, 3, 4
+INF = jnp.int32(1 << 30)
+
+POLICIES = {"fifo": 0, "tas": 1, "prop": 2, "libasl": 3}
+
+# 1 tick = 10 ns
+US = 100  # ticks per microsecond
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    """Static simulator configuration (hashable -> usable as jit static arg)."""
+
+    policy: str = "fifo"
+    n_cores: int = 8
+    big: tuple = (1, 1, 1, 1, 0, 0, 0, 0)          # 4 big + 4 little (M1)
+    speed_cs: tuple = (1.0,) * 4 + (3.75,) * 4     # CS slowdown (Sysbench gap)
+    speed_nc: tuple = (1.0,) * 4 + (1.8,) * 4      # non-CS slowdown (NOP gap)
+    # Epoch program: S segments of (noncrit_us, cs_us, lock_id)
+    seg_noncrit_us: tuple = (1.0,)
+    seg_cs_us: tuple = (3.0,)
+    seg_lock: tuple = (0,)
+    inter_epoch_us: float = 5.0
+    n_locks: int = 1
+    pct: float = 99.0
+    w_big: float = 1.0            # TAS affinity weight
+    prop_n: int = 10              # proportional policy ratio
+    default_window_us: float = 10.0
+    max_window_us: float = 100_000.0   # 100 ms upper bound (starvation-free)
+    sim_time_us: float = 100_000.0
+    epcap: int = 8192             # latency ring size
+    max_events: int = 5_000_000
+    # Bench-3: heterogeneous epochs — with prob p the next epoch's
+    # non-critical work is scale x longer (long request mixed with short).
+    long_epoch_prob: float = 0.0
+    long_epoch_scale: float = 100.0
+    # Bench-6: blocking locks — FIFO handoff to a parked waiter pays a
+    # wakeup latency; a standby grabbing a free lock (spinning) does not.
+    wakeup_us: float = 0.0
+
+    @property
+    def policy_id(self) -> int:
+        return POLICIES[self.policy]
+
+
+class SimState(NamedTuple):
+    t: jnp.ndarray
+    key: jnp.ndarray
+    phase: jnp.ndarray        # i32[N]
+    t_ready: jnp.ndarray      # i32[N]
+    seg: jnp.ndarray          # i32[N]
+    epoch_start: jnp.ndarray  # i32[N]
+    attempt_t: jnp.ndarray    # i32[N]
+    window: jnp.ndarray       # f32[N] (ticks)
+    unit: jnp.ndarray         # f32[N]
+    scale: jnp.ndarray        # f32[N] current epoch noncrit scale (Bench-3)
+    q: jnp.ndarray            # i32[L,2,N] ring buffers (0=main/big, 1=little)
+    q_head: jnp.ndarray       # i32[L,2]
+    q_tail: jnp.ndarray       # i32[L,2]
+    holder: jnp.ndarray       # i32[L]
+    prop_ctr: jnp.ndarray     # i32[L]
+    ep_lat: jnp.ndarray       # f32[N,EPCAP] epoch latencies (ticks)
+    ep_cnt: jnp.ndarray       # i32[N]
+    cs_lat: jnp.ndarray       # f32[N,EPCAP] acquire->release latencies
+    cs_cnt: jnp.ndarray       # i32[N]
+    events: jnp.ndarray       # i32
+
+
+def _ticks(us: float) -> int:
+    return int(round(us * US))
+
+
+def init_state(cfg: SimConfig, seed: int = 0, windows0=None) -> SimState:
+    n, l, cap = cfg.n_cores, cfg.n_locks, cfg.epcap
+    nc0 = jnp.asarray(
+        [_ticks(cfg.seg_noncrit_us[0] * cfg.speed_nc[c]) for c in range(n)],
+        jnp.int32)
+    # Stagger initial arrivals slightly so ties don't all collapse to core 0.
+    stagger = jnp.arange(n, dtype=jnp.int32)
+    return SimState(
+        t=jnp.int32(0),
+        key=jax.random.PRNGKey(seed),
+        phase=jnp.zeros(n, jnp.int32),
+        t_ready=nc0 + stagger,
+        seg=jnp.zeros(n, jnp.int32),
+        epoch_start=jnp.zeros(n, jnp.int32),
+        attempt_t=jnp.zeros(n, jnp.int32),
+        window=(jnp.asarray(windows0, jnp.float32) if windows0 is not None
+                else jnp.full(n, _ticks(cfg.default_window_us), jnp.float32)),
+        unit=jnp.full(n, _ticks(cfg.default_window_us) * (100.0 - cfg.pct) / 100.0,
+                      jnp.float32),
+        q=jnp.full((l, 2, n), -1, jnp.int32),
+        q_head=jnp.zeros((l, 2), jnp.int32),
+        q_tail=jnp.zeros((l, 2), jnp.int32),
+        holder=jnp.full(l, -1, jnp.int32),
+        prop_ctr=jnp.zeros(l, jnp.int32),
+        scale=jnp.ones(n, jnp.float32),
+        ep_lat=jnp.zeros((n, cap), jnp.float32),
+        ep_cnt=jnp.zeros(n, jnp.int32),
+        cs_lat=jnp.zeros((n, cap), jnp.float32),
+        cs_cnt=jnp.zeros(n, jnp.int32),
+        events=jnp.int32(0),
+    )
+
+
+# --------------------------------------------------------------------------
+# Static per-config arrays
+# --------------------------------------------------------------------------
+
+def _tables(cfg: SimConfig):
+    n = cfg.n_cores
+    s = len(cfg.seg_cs_us)
+    big = jnp.asarray(cfg.big[:n], jnp.int32)
+    cs_dur = jnp.asarray(
+        [[_ticks(cfg.seg_cs_us[j] * cfg.speed_cs[c]) for j in range(s)]
+         for c in range(n)], jnp.int32)          # [N,S]
+    nc_dur = jnp.asarray(
+        [[_ticks(cfg.seg_noncrit_us[j] * cfg.speed_nc[c]) for j in range(s)]
+         for c in range(n)], jnp.int32)          # [N,S]
+    inter = jnp.asarray(
+        [_ticks(cfg.inter_epoch_us * cfg.speed_nc[c]) for c in range(n)],
+        jnp.int32)                                # [N]
+    seg_lock = jnp.asarray(cfg.seg_lock, jnp.int32)  # [S]
+    return big, cs_dur, nc_dur, inter, seg_lock
+
+
+# --------------------------------------------------------------------------
+# Queue helpers (ring buffers). All conditional: ops are no-ops when !cond.
+# --------------------------------------------------------------------------
+
+def _enq(st: SimState, cond, l, b, c) -> SimState:
+    n = st.q.shape[-1]
+    pos = st.q_tail[l, b] % n
+    val = jnp.where(cond, c, st.q[l, b, pos])
+    q = st.q.at[l, b, pos].set(val)
+    q_tail = st.q_tail.at[l, b].add(jnp.where(cond, 1, 0))
+    return st._replace(q=q, q_tail=q_tail)
+
+
+def _deq(st: SimState, cond, l, b):
+    """Returns (st, core) — core = -1 when !cond or empty."""
+    n = st.q.shape[-1]
+    nonempty = st.q_tail[l, b] > st.q_head[l, b]
+    do = jnp.logical_and(cond, nonempty)
+    pos = st.q_head[l, b] % n
+    c = jnp.where(do, st.q[l, b, pos], -1)
+    q_head = st.q_head.at[l, b].add(jnp.where(do, 1, 0))
+    return st._replace(q_head=q_head), c
+
+
+def _qlen(st: SimState, l, b):
+    return st.q_tail[l, b] - st.q_head[l, b]
+
+
+# --------------------------------------------------------------------------
+# Event handlers
+# --------------------------------------------------------------------------
+
+def _grant(st: SimState, cfg: SimConfig, cond, c, t, wakeup=False) -> SimState:
+    """Make core c (if cond) the holder of its lock; schedule its release.
+    ``wakeup=True`` models a blocking lock's parked-waiter handoff latency
+    (Bench-6): only queue-pop handoffs pay it, spinners/standbys do not."""
+    _, cs_dur, _, _, seg_lock = _tables(cfg)
+    c_safe = jnp.maximum(c, 0)
+    l = seg_lock[st.seg[c_safe]]
+    dur = cs_dur[c_safe, st.seg[c_safe]]
+    if wakeup and cfg.wakeup_us:
+        dur = dur + _ticks(cfg.wakeup_us)
+    holder = st.holder.at[l].set(jnp.where(cond, c_safe, st.holder[l]))
+    phase = st.phase.at[c_safe].set(
+        jnp.where(cond, HOLDER, st.phase[c_safe]))
+    t_ready = st.t_ready.at[c_safe].set(
+        jnp.where(cond, t + dur, st.t_ready[c_safe]))
+    return st._replace(holder=holder, phase=phase, t_ready=t_ready)
+
+
+def _handle_acquire(st: SimState, cfg: SimConfig, c, t) -> SimState:
+    big, _, _, _, seg_lock = _tables(cfg)
+    l = seg_lock[st.seg[c]]
+    st = st._replace(attempt_t=st.attempt_t.at[c].set(t))
+    is_big = big[c] == 1
+    free = st.holder[l] == -1
+
+    if cfg.policy == "tas":
+        # Free -> grab; else spin (woken at release by weighted draw).
+        st = _grant(st, cfg, free, c, t)
+        st = st._replace(
+            phase=st.phase.at[c].set(jnp.where(free, st.phase[c], SPIN)),
+            t_ready=st.t_ready.at[c].set(jnp.where(free, st.t_ready[c], INF)))
+        return st
+
+    if cfg.policy == "prop":
+        q_empty = jnp.logical_and(_qlen(st, l, 0) == 0, _qlen(st, l, 1) == 0)
+        grab = jnp.logical_and(free, q_empty)
+        st = _grant(st, cfg, grab, c, t)
+        b = jnp.where(is_big, 0, 1)
+        st = _enq(st, ~grab, l, b, c)
+        st = st._replace(
+            phase=st.phase.at[c].set(jnp.where(grab, st.phase[c], QUEUED)),
+            t_ready=st.t_ready.at[c].set(jnp.where(grab, st.t_ready[c], INF)))
+        return st
+
+    if cfg.policy == "libasl":
+        q_empty = _qlen(st, l, 0) == 0
+        grab = jnp.logical_and(free, q_empty)
+        # Big cores: lock_immediately == FIFO enqueue. Little: standby.
+        enq = jnp.logical_and(~grab, is_big)
+        standby = jnp.logical_and(~grab, ~is_big)
+        st = _grant(st, cfg, grab, c, t)
+        st = _enq(st, enq, l, 0, c)
+        win = jnp.minimum(st.window[c], _ticks(cfg.max_window_us)).astype(jnp.int32)
+        new_phase = jnp.where(grab, st.phase[c],
+                              jnp.where(is_big, QUEUED, STANDBY))
+        new_ready = jnp.where(grab, st.t_ready[c],
+                              jnp.where(is_big, INF, t + jnp.maximum(win, 0)))
+        st = st._replace(
+            phase=st.phase.at[c].set(new_phase),
+            t_ready=st.t_ready.at[c].set(new_ready))
+        return st
+
+    # fifo (MCS)
+    q_empty = _qlen(st, l, 0) == 0
+    grab = jnp.logical_and(free, q_empty)
+    st = _grant(st, cfg, grab, c, t)
+    st = _enq(st, ~grab, l, 0, c)
+    st = st._replace(
+        phase=st.phase.at[c].set(jnp.where(grab, st.phase[c], QUEUED)),
+        t_ready=st.t_ready.at[c].set(jnp.where(grab, st.t_ready[c], INF)))
+    return st
+
+
+def _handle_standby_expiry(st: SimState, cfg: SimConfig, c, t) -> SimState:
+    """LibASL little core: reorder window expired -> enqueue FIFO (Alg.1 l.16)."""
+    _, _, _, _, seg_lock = _tables(cfg)
+    l = seg_lock[st.seg[c]]
+    free = jnp.logical_and(st.holder[l] == -1, _qlen(st, l, 0) == 0)
+    st = _grant(st, cfg, free, c, t)
+    st = _enq(st, ~free, l, 0, c)
+    st = st._replace(
+        phase=st.phase.at[c].set(jnp.where(free, st.phase[c], QUEUED)),
+        t_ready=st.t_ready.at[c].set(jnp.where(free, st.t_ready[c], INF)))
+    return st
+
+
+def _record(buf, cnt, c, value, cond):
+    cap = buf.shape[1]
+    pos = cnt[c] % cap
+    val = jnp.where(cond, value, buf[c, pos])
+    return buf.at[c, pos].set(val), cnt.at[c].add(jnp.where(cond, 1, 0))
+
+
+def _pick_next(st: SimState, cfg: SimConfig, l, t, slo):
+    """Select & grant the next holder of lock l after a release."""
+    big, cs_dur, _, _, seg_lock = _tables(cfg)
+    n = cfg.n_cores
+
+    if cfg.policy == "tas":
+        spinning = jnp.logical_and(st.phase == SPIN, seg_lock[st.seg] == l)
+        any_spin = jnp.any(spinning)
+        key, sub = jax.random.split(st.key)
+        w = jnp.where(big == 1, cfg.w_big, 1.0)
+        logits = jnp.where(spinning, jnp.log(w), -jnp.inf)
+        winner = jax.random.categorical(sub, logits)
+        st = st._replace(key=key)
+        st = _grant(st, cfg, any_spin, winner, t)
+        holder = st.holder.at[l].set(
+            jnp.where(any_spin, st.holder[l], -1))
+        return st._replace(holder=holder)
+
+    if cfg.policy == "prop":
+        nb, nl = _qlen(st, l, 0), _qlen(st, l, 1)
+        take_big = jnp.logical_and(
+            nb > 0, jnp.logical_or(st.prop_ctr[l] < cfg.prop_n, nl == 0))
+        take_little = jnp.logical_and(~take_big, nl > 0)
+        st, cb = _deq(st, take_big, l, 0)
+        st, cl = _deq(st, take_little, l, 1)
+        nxt = jnp.where(take_big, cb, cl)
+        has = jnp.logical_or(take_big, take_little)
+        ctr = jnp.where(take_big, st.prop_ctr[l] + 1,
+                        jnp.where(take_little, 0, st.prop_ctr[l]))
+        st = st._replace(prop_ctr=st.prop_ctr.at[l].set(ctr))
+        st = _grant(st, cfg, has, nxt, t, wakeup=True)
+        holder = st.holder.at[l].set(jnp.where(has, st.holder[l], -1))
+        return st._replace(holder=holder)
+
+    # fifo & libasl: FIFO queue first.
+    nonempty = _qlen(st, l, 0) > 0
+    st, cq = _deq(st, nonempty, l, 0)
+    st = _grant(st, cfg, nonempty, cq, t, wakeup=True)
+
+    if cfg.policy == "libasl":
+        # Queue empty -> a standby competitor may grab the free lock
+        # (Algorithm 1: "when the waiting queue is empty").
+        standby = jnp.logical_and(st.phase == STANDBY, seg_lock[st.seg] == l)
+        any_standby = jnp.logical_and(~nonempty, jnp.any(standby))
+        key, sub = jax.random.split(st.key)
+        logits = jnp.where(standby, 0.0, -jnp.inf)
+        pick = jax.random.categorical(sub, logits)
+        st = st._replace(key=key)
+        st = _grant(st, cfg, any_standby, pick, t)
+        has = jnp.logical_or(nonempty, any_standby)
+        holder = st.holder.at[l].set(jnp.where(has, st.holder[l], -1))
+        return st._replace(holder=holder)
+
+    holder = st.holder.at[l].set(jnp.where(nonempty, st.holder[l], -1))
+    return st._replace(holder=holder)
+
+
+def _handle_release(st: SimState, cfg: SimConfig, c, t, slo) -> SimState:
+    big, cs_dur, nc_dur, inter, seg_lock = _tables(cfg)
+    s = st.seg[c]
+    l = seg_lock[s]
+    n_seg = len(cfg.seg_cs_us)
+
+    # acquire->release latency (paper Figure 1 metric)
+    cs_lat, cs_cnt = _record(st.cs_lat, st.cs_cnt, c,
+                             (t - st.attempt_t[c]).astype(jnp.float32), True)
+    st = st._replace(cs_lat=cs_lat, cs_cnt=cs_cnt)
+
+    last = s == n_seg - 1
+    # Epoch end: record latency, AIMD-update the window (little cores only).
+    ep_latency = (t - st.epoch_start[c]).astype(jnp.float32)
+    ep_lat, ep_cnt = _record(st.ep_lat, st.ep_cnt, c, ep_latency, last)
+    st = st._replace(ep_lat=ep_lat, ep_cnt=ep_cnt)
+
+    if cfg.policy == "libasl":
+        adjust = jnp.logical_and(last, big[c] == 0)
+        violated = ep_latency > slo
+        w = jnp.where(violated, st.window[c] * 0.5, st.window[c])
+        u = jnp.where(violated, w * (100.0 - cfg.pct) / 100.0, st.unit[c])
+        w = jnp.clip(w + u, 0.0, _ticks(cfg.max_window_us))
+        st = st._replace(
+            window=st.window.at[c].set(jnp.where(adjust, w, st.window[c])),
+            unit=st.unit.at[c].set(jnp.where(adjust, u, st.unit[c])))
+
+    # Bench-3: sample the next epoch's noncrit scale (heterogeneous mix).
+    scale_c = st.scale[c]
+    if cfg.long_epoch_prob > 0.0:
+        key, sub = jax.random.split(st.key)
+        u = jax.random.uniform(sub)
+        new_scale = jnp.where(u < cfg.long_epoch_prob,
+                              jnp.float32(cfg.long_epoch_scale),
+                              jnp.float32(1.0))
+        st = st._replace(key=key,
+                         scale=st.scale.at[c].set(
+                             jnp.where(last, new_scale, scale_c)))
+        scale_c = jnp.where(last, new_scale, scale_c)
+
+    def _sc(d):
+        return (d.astype(jnp.float32) * scale_c).astype(jnp.int32)
+
+    # Advance the program: next segment, or inter-epoch gap then segment 0.
+    s_next = jnp.where(last, 0, s + 1)
+    ep_start_next = jnp.where(last, t + _sc(inter[c]), st.epoch_start[c])
+    ready = jnp.where(last,
+                      t + _sc(inter[c]) + _sc(nc_dur[c, 0]),
+                      t + _sc(nc_dur[c, jnp.minimum(s + 1, n_seg - 1)]))
+    st = st._replace(
+        seg=st.seg.at[c].set(s_next),
+        epoch_start=st.epoch_start.at[c].set(ep_start_next),
+        phase=st.phase.at[c].set(NONCRIT),
+        t_ready=st.t_ready.at[c].set(ready))
+
+    # Hand the lock over.
+    st = st._replace(holder=st.holder.at[l].set(-1))
+    return _pick_next(st, cfg, l, t, slo)
+
+
+# --------------------------------------------------------------------------
+# Main loop
+# --------------------------------------------------------------------------
+
+def _step(cfg: SimConfig, slo, st: SimState) -> SimState:
+    c = jnp.argmin(st.t_ready).astype(jnp.int32)
+    t = st.t_ready[c]
+    st = st._replace(t=t, events=st.events + 1)
+
+    def acq(s):
+        return _handle_acquire(s, cfg, c, t)
+
+    def standby(s):
+        return _handle_standby_expiry(s, cfg, c, t)
+
+    def rel(s):
+        return _handle_release(s, cfg, c, t, slo)
+
+    def noop(s):
+        return s._replace(t_ready=s.t_ready.at[c].set(INF))
+
+    return jax.lax.switch(st.phase[c], [acq, standby, noop, rel, noop], st)
+
+
+@partial(jax.jit, static_argnums=(0,))
+def run(cfg: SimConfig, slo_us, seed=0, windows0=None) -> SimState:
+    """Run the simulation; slo_us may be a traced scalar (vmap over sweeps).
+    ``windows0`` carries AIMD state across phases (Bench-2)."""
+    slo = (slo_us * US).astype(jnp.float32) if hasattr(slo_us, "astype") \
+        else jnp.float32(_ticks(slo_us))
+    st = init_state(cfg, seed, windows0)
+    horizon = jnp.int32(_ticks(cfg.sim_time_us))
+
+    def cond(s):
+        return jnp.logical_and(jnp.min(s.t_ready) < horizon,
+                               s.events < cfg.max_events)
+
+    def body(s):
+        return _step(cfg, slo, s)
+
+    return jax.lax.while_loop(cond, body, st)
+
+
+def sweep_slo(cfg: SimConfig, slo_us_values, seed=0) -> SimState:
+    """Paper Figure 8b in one call: vmap the whole simulation over SLOs."""
+    slos = jnp.asarray(slo_us_values, jnp.float32)
+    return jax.vmap(lambda s: run(cfg, s, seed))(slos)
+
+
+# --------------------------------------------------------------------------
+# Host-side summaries
+# --------------------------------------------------------------------------
+
+def _ring_values(buf: np.ndarray, cnt: int, warmup: int = 32) -> np.ndarray:
+    cap = buf.shape[0]
+    if cnt <= cap:
+        vals = buf[:cnt]
+        return vals[min(warmup, max(cnt - 1, 0)):]
+    return buf  # ring wrapped: holds the most recent `cap` samples
+
+def summarize(cfg: SimConfig, st: SimState, warmup: int = 32) -> dict:
+    """Throughput + tail latency per core class (all values in us)."""
+    big = np.asarray(cfg.big[:cfg.n_cores], bool)
+    ep_lat = np.asarray(st.ep_lat)
+    ep_cnt = np.asarray(st.ep_cnt)
+    cs_lat = np.asarray(st.cs_lat)
+    cs_cnt = np.asarray(st.cs_cnt)
+    t_end = float(np.asarray(st.t)) / US
+    sim_s = max(t_end, 1e-9) / 1e6
+
+    def collect(lat, cnt, mask):
+        vals = [
+            _ring_values(lat[c], int(cnt[c]), warmup)
+            for c in range(cfg.n_cores) if mask[c]
+        ]
+        v = np.concatenate(vals) if vals else np.zeros(0)
+        return v / US  # -> microseconds
+
+    out = {
+        "sim_time_us": t_end,
+        "events": int(np.asarray(st.events)),
+        "throughput_cs_per_s": float(cs_cnt.sum()) / sim_s,
+        "throughput_epochs_per_s": float(ep_cnt.sum()) / sim_s,
+        "cs_per_core": cs_cnt.tolist(),
+        "epochs_per_core": ep_cnt.tolist(),
+    }
+    for name, mask in (("all", np.ones_like(big)), ("big", big),
+                       ("little", ~big)):
+        ep = collect(ep_lat, ep_cnt, mask)
+        cs = collect(cs_lat, cs_cnt, mask)
+        out[f"ep_p99_{name}_us"] = float(np.percentile(ep, 99)) if ep.size else float("nan")
+        out[f"ep_p50_{name}_us"] = float(np.percentile(ep, 50)) if ep.size else float("nan")
+        out[f"cs_p99_{name}_us"] = float(np.percentile(cs, 99)) if cs.size else float("nan")
+    out["final_window_us"] = (np.asarray(st.window) / US).tolist()
+    return out

@@ -1,0 +1,71 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+On this CPU container kernels execute in ``interpret=True`` mode (the body
+runs as Python/XLA ops — correctness only).  On a real TPU set
+``repro.kernels.ops.INTERPRET = False`` (or env ``REPRO_PALLAS_COMPILE=1``)
+and the same call sites compile to Mosaic.  The model layers call these via
+``use_pallas=True`` config paths; the jnp fallbacks are the ref oracles.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as _decode
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.mlstm_scan import mlstm_scan as _mlstm
+from repro.kernels.rglru_scan import rglru_scan as _rglru
+
+INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+def _pick_block(n, target):
+    b = min(n, target)
+    while n % b:
+        b //= 2
+    return max(b, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window"))
+def flash_attention(q, k, v, *, causal=True, window=0):
+    s, t = q.shape[2], k.shape[2]
+    bq = _pick_block(s, 512)
+    bk = _pick_block(t, 512)
+    if bq < 8 or bk < 8:     # degenerate tiling: use the oracle
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    return _flash(q, k, v, causal=causal, window=window, block_q=bq,
+                  block_k=bk, interpret=INTERPRET)
+
+
+@jax.jit
+def decode_attention(q, k_cache, v_cache, lengths):
+    t = k_cache.shape[2]
+    bk = _pick_block(t, 512)
+    if bk < 8:
+        return ref.decode_attention_ref(q, k_cache, v_cache, lengths)
+    return _decode(q, k_cache, v_cache, lengths, block_k=bk,
+                   interpret=INTERPRET)
+
+
+@jax.jit
+def rglru_scan(a, x, h0=None):
+    s, r = a.shape[1], a.shape[2]
+    bs = _pick_block(s, 256)
+    bc = _pick_block(r, 256)
+    if bs < 8 or bc < 8:
+        return ref.rglru_scan_ref(a, x, h0)
+    return _rglru(a, x, h0, block_s=bs, block_c=bc, interpret=INTERPRET)
+
+
+@jax.jit
+def mlstm_scan(q, k, v, i_gate, f_gate, carry=None):
+    s = q.shape[2]
+    bs = _pick_block(s, 128)
+    if bs < 8:
+        return ref.mlstm_scan_ref(q, k, v, i_gate, f_gate, carry)
+    return _mlstm(q, k, v, i_gate, f_gate, carry, block_s=bs,
+                  interpret=INTERPRET)

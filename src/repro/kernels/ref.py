@@ -1,0 +1,98 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q: [B,H,S,dh]; k,v: [B,K,T,dh] (GQA: H % K == 0) -> [B,H,S,dh]."""
+    b, h, s, dh = q.shape
+    kh, t = k.shape[1], k.shape[2]
+    g = h // kh
+    qf = q.astype(jnp.float32).reshape(b, kh, g, s, dh)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bkgsd,bktd->bkgst", qf, kf) / np.sqrt(dh)
+    iq = jnp.arange(s)[:, None]
+    jk = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask = jk <= iq
+        if window:
+            mask = jnp.logical_and(mask, jk > iq - window)
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", probs, vf)
+    return out.reshape(b, h, s, dh).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """q: [B,H,dh]; caches: [B,K,T,dh]; lengths: [B] -> [B,H,dh]."""
+    b, h, dh = q.shape
+    kh, t = k_cache.shape[1], k_cache.shape[2]
+    g = h // kh
+    qf = q.astype(jnp.float32).reshape(b, kh, g, dh)
+    scores = jnp.einsum("bkgd,bktd->bkgt", qf,
+                        k_cache.astype(jnp.float32)) / np.sqrt(dh)
+    valid = jnp.arange(t)[None, :] < lengths[:, None]          # [B,T]
+    scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,bktd->bkgd", probs,
+                     v_cache.astype(jnp.float32))
+    return out.reshape(b, h, dh).astype(q.dtype)
+
+
+def rglru_scan_ref(a, x, h0=None):
+    """h_t = a_t * h_{t-1} + x_t, fp32. a,x: [B,S,R]; h0: [B,R]."""
+    af = a.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    b, s, r = a.shape
+    h = jnp.zeros((b, r), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, ax):
+        at, xt = ax
+        h = at * h + xt
+        return h, h
+
+    _, hs = jax.lax.scan(step, h, (jnp.swapaxes(af, 0, 1),
+                                   jnp.swapaxes(xf, 0, 1)))
+    return jnp.swapaxes(hs, 0, 1).astype(a.dtype)
+
+
+def mlstm_scan_ref(q, k, v, i_gate, f_gate, carry=None):
+    """Stabilized mLSTM recurrence (the model's semantics).
+
+    q,k,v: [B,H,S,dh] (k pre-scaled); gates: [B,H,S]. -> h: [B,H,S,dh].
+    """
+    b, h, s, dh = q.shape
+    if carry is None:
+        C = jnp.zeros((b, h, dh, dh), jnp.float32)
+        n = jnp.zeros((b, h, dh), jnp.float32)
+        m = jnp.full((b, h), -1e30, jnp.float32)
+    else:
+        C, n, m = carry
+
+    def step(cr, xs):
+        C, n, m = cr
+        qt, kt, vt, it, ft = xs
+        log_f = -jax.nn.softplus(-ft)
+        m_new = jnp.maximum(log_f + m, it)
+        i_p = jnp.exp(it - m_new)[..., None]
+        f_p = jnp.exp(log_f + m - m_new)[..., None]
+        C = f_p[..., None] * C + i_p[..., None] * (vt[..., :, None] *
+                                                   kt[..., None, :])
+        n = f_p * n + i_p * kt
+        num = jnp.einsum("bhij,bhj->bhi", C, qt)
+        den = jnp.abs(jnp.einsum("bhj,bhj->bh", n, qt))[..., None]
+        return (C, n, m_new), num / jnp.maximum(den, 1.0)
+
+    xs = (jnp.moveaxis(q.astype(jnp.float32), 2, 0),
+          jnp.moveaxis(k.astype(jnp.float32), 2, 0),
+          jnp.moveaxis(v.astype(jnp.float32), 2, 0),
+          jnp.moveaxis(i_gate.astype(jnp.float32), 2, 0),
+          jnp.moveaxis(f_gate.astype(jnp.float32), 2, 0))
+    carry, hs = jax.lax.scan(step, (C, n, m), xs)
+    return jnp.moveaxis(hs, 0, 2).astype(q.dtype), carry

@@ -1,0 +1,203 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: 512 placeholder
+host devices stand in for 2 pods x 256 chips.  Per cell we record
+``memory_analysis`` (fits / doesn't), ``cost_analysis`` (FLOPs, bytes) and
+the collective schedule summary into ``artifacts/dryrun/<cell>.json``
+(incremental: cells already on disk are skipped unless --force).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod both]
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.dist.hlo_analysis import analytic_model_flops, collective_stats
+from repro.dist.sharding import build_rules, use_mesh
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import batch_specs, decode_specs
+from repro.models import lm
+from repro.models.config import cell_applicable, standard_shapes
+from repro.optim.adamw import AdamW, cosine_schedule
+from repro.train.step import make_train_step
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_cell(cfg, meta, shape, mesh):
+    """-> (jitted fn, abstract args tuple) for one cell."""
+    rules = build_rules(mesh, kv_heads=cfg.n_kv_heads,
+                        n_experts=cfg.n_experts, step=shape.kind,
+                        seq_parallel=cfg.seq_parallel,
+                        expert_parallel=cfg.expert_parallel)
+    aparams = lm.abstract_params(cfg)
+    pspecs = lm.param_pspecs(cfg, rules)
+
+    if shape.kind == "train":
+        opt = AdamW(state_dtype=cfg.opt_state_dtype)
+        lr_fn = cosine_schedule(3e-4, 100, 10000)
+        step_fn = make_train_step(cfg, opt, lr_fn,
+                                  microbatches=shape.microbatches)
+        aopt = jax.eval_shape(opt.init, aparams)
+        ospecs = type(aopt)(m=pspecs, v=pspecs, count=P())
+        bspecs, baxes = batch_specs(cfg, shape)
+        bshard = {k: rules.spec(baxes[k], bspecs[k].shape) for k in baxes}
+        astep = jax.ShapeDtypeStruct((), jax.numpy.int32)
+        in_sh = (_ns(mesh, pspecs), _ns(mesh, ospecs),
+                 NamedSharding(mesh, P()), _ns(mesh, bshard))
+        out_sh = (_ns(mesh, pspecs), _ns(mesh, ospecs),
+                  NamedSharding(mesh, P()), None)
+        fn = jax.jit(step_fn, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=(0, 1))
+        return rules, fn, (aparams, aopt, astep, bspecs)
+
+    if shape.kind == "prefill":
+        bspecs, baxes = batch_specs(cfg, shape)
+        bshard = {k: rules.spec(baxes[k], bspecs[k].shape) for k in baxes}
+        acache = lm.abstract_cache(cfg, shape.global_batch, shape.seq_len)
+        cspecs = lm.cache_pspecs(cfg, shape.global_batch, shape.seq_len,
+                                 rules)
+
+        def prefill_fn(params, batch, cache):
+            return lm.prefill(params, cfg, batch, cache)
+
+        fn = jax.jit(prefill_fn,
+                     in_shardings=(_ns(mesh, pspecs), _ns(mesh, bshard),
+                                   _ns(mesh, cspecs)),
+                     donate_argnums=(2,))
+        return rules, fn, (aparams, bspecs, acache)
+
+    # decode
+    tokens, lengths, acache, _ = decode_specs(cfg, shape)
+    cspecs = lm.cache_pspecs(cfg, shape.global_batch, shape.seq_len, rules)
+
+    def decode_fn(params, tok, lens, cache):
+        return lm.decode_step(params, cfg, tok, lens, cache)
+
+    fn = jax.jit(decode_fn,
+                 in_shardings=(_ns(mesh, pspecs),
+                               NamedSharding(mesh, rules.spec(
+                                   ("batch", "seq"), tokens.shape)),
+                               NamedSharding(mesh, rules.spec(
+                                   ("batch",), lengths.shape)),
+                               _ns(mesh, cspecs)),
+                 donate_argnums=(3,))
+    return rules, fn, (aparams, tokens, lengths, acache)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             force: bool = False, save_hlo: bool = False) -> dict:
+    mesh_tag = "pod2" if multi_pod else "pod1"
+    cell_id = f"{arch}__{shape_name}__{mesh_tag}"
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    out_path = ARTIFACTS / f"{cell_id}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    cfg, meta = registry.get(arch)
+    shapes = standard_shapes(meta.train_microbatches)
+    shape = shapes[shape_name]
+    rec = {"cell": cell_id, "arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16", "ok": False}
+
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        rec.update(skipped=True, reason=why, ok=True)
+        out_path.write_text(json.dumps(rec, indent=1))
+        return rec
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        rules, fn, args = build_cell(cfg, meta, shape, mesh)
+        with use_mesh(mesh, rules):
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+        n_dev = int(np.prod(mesh.devices.shape))
+        mem_d = {}
+        for f in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "temp_size_in_bytes",
+                  "alias_size_in_bytes", "peak_memory_in_bytes"):
+            v = getattr(mem, f, None)
+            if v is not None:
+                mem_d[f] = int(v)
+        coll = collective_stats(compiled.as_text())
+        if save_hlo:
+            (ARTIFACTS / f"{cell_id}.hlo.txt").write_text(compiled.as_text())
+        rec.update(
+            ok=True, devices=n_dev,
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            flops=float(cost.get("flops", 0.0)),
+            bytes_accessed=float(cost.get("bytes accessed", 0.0)),
+            memory=mem_d,
+            collectives=coll,
+            model_flops=analytic_model_flops(cfg, shape),
+            microbatches=shape.microbatches if shape.kind == "train" else 1,
+        )
+    except Exception as e:  # record the failure; dry-run failures are bugs
+        rec.update(ok=False, error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    out_path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["off", "on", "both"],
+                    default="both")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    pods = {"off": [False], "on": [True], "both": [False, True]}[
+        args.multi_pod]
+    archs = [args.arch] if args.arch else [a.replace("_", "-")
+                                           for a in registry.ARCHS]
+    shapes = [args.shape] if args.shape else list(standard_shapes())
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in pods:
+                t0 = time.time()
+                rec = run_cell(arch, shape, mp, force=args.force,
+                               save_hlo=args.save_hlo)
+                status = "SKIP" if rec.get("skipped") else (
+                    "ok" if rec["ok"] else "FAIL")
+                n_fail += 0 if rec["ok"] else 1
+                extra = rec.get("reason", rec.get("error", ""))
+                peak = rec.get("memory", {}).get("peak_memory_in_bytes")
+                peak_s = f" peak={peak/2**30:.2f}GiB" if peak else ""
+                print(f"[{status:4s}] {rec['cell']:50s} "
+                      f"{time.time()-t0:7.1f}s{peak_s} {extra}", flush=True)
+    print(f"dry-run complete, failures: {n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""ShapeDtypeStruct input stand-ins + shardings for every (arch x shape) cell.
+
+``input_specs`` returns abstract inputs for the step function of a cell —
+weak-type-correct, shardable, zero device allocation — plus the matching
+logical-axis trees used to derive in_shardings.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ModelConfig, ShapeSpec
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """Abstract batch dict + logical axes per entry (train/prefill)."""
+    b, s = shape.global_batch, shape.seq_len
+    f32 = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if cfg.frontend == "audio_stub":
+        specs = {"frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), f32),
+                 "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        axes = {"frames": ("batch", "seq", "act_embed"),
+                "labels": ("batch", "seq")}
+    elif cfg.frontend == "vision_stub":
+        p = cfg.n_patches
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s - p), jnp.int32),
+                 "patch_embeds": jax.ShapeDtypeStruct((b, p, cfg.d_model), f32),
+                 "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        axes = {"tokens": ("batch", "seq"),
+                "patch_embeds": ("batch", "seq", "act_embed"),
+                "labels": ("batch", "seq")}
+    else:
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        axes = {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+    if shape.kind == "prefill":
+        specs.pop("labels")
+        axes.pop("labels")
+    return specs, axes
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """Abstract (tokens, lengths, cache) for a decode cell."""
+    b, t = shape.global_batch, shape.seq_len
+    tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    lengths = jax.ShapeDtypeStruct((b,), jnp.int32)
+    cache = lm.abstract_cache(cfg, b, t)
+    axes = {"tokens": ("batch", "seq"), "lengths": ("batch",)}
+    return tokens, lengths, cache, axes
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """The public entry: dict of abstract inputs for the cell's step fn."""
+    if shape.kind == "decode":
+        tokens, lengths, cache, _ = decode_specs(cfg, shape)
+        return {"tokens": tokens, "lengths": lengths, "cache": cache}
+    specs, _ = batch_specs(cfg, shape)
+    return specs

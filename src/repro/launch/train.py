@@ -1,0 +1,51 @@
+"""Training launcher: ``python -m repro.launch.train --arch yi-6b [--tiny]``.
+
+On real hardware this runs under the production mesh with the cell's
+shardings; on this container use ``--tiny`` (reduced config, 1 device) for
+an end-to-end run — examples/quickstart.py wraps exactly that.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import registry
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--tiny", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--ckpt-dir", type=str, default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    if args.tiny:
+        cfg = registry.get_tiny(args.arch)
+    else:
+        cfg, _meta = registry.get(args.arch)
+
+    t = Trainer(cfg, TrainerConfig(
+        total_steps=args.steps, ckpt_every=args.ckpt_every,
+        ckpt_dir=args.ckpt_dir, lr=args.lr,
+        microbatches=args.microbatches,
+        global_batch=args.global_batch, seq_len=args.seq_len))
+    t.install_signal_handlers()
+    out = t.run()
+    hist = out["history"]
+    print(f"arch={cfg.name} steps={out['step']} "
+          f"loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f} "
+          f"stragglers={len(out['stragglers'])} "
+          f"preempted={out['preempted']}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Model + shape configuration schema shared by all ten architectures."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+          "float16": jnp.float16}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense|moe|hybrid|ssm|audio|vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    block_pattern: tuple = ("attn",)   # cycled over layers
+    activation: str = "swiglu"         # swiglu|geglu|gelu
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    expert_parallel: bool = False      # shard experts over 'data' (EP)
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    local_window: int = 0              # window for "local_attn" blocks
+    causal: bool = True                # False: encoder-only (hubert)
+    frontend: str = "none"             # none|audio_stub|vision_stub
+    n_patches: int = 0                 # vlm: prepended patch embeddings
+    emb_scale: bool = False            # gemma: embeddings * sqrt(d)
+    logits_softcap: float = 0.0        # grok-style tanh soft-cap
+    norm_eps: float = 1e-6
+    rnn_width: int = 0                 # rglru recurrence width
+    conv_width: int = 4                # rglru temporal conv
+    dtype: str = "bfloat16"            # activation/compute dtype
+    param_dtype: str = "float32"       # at-rest parameter dtype
+    opt_state_dtype: str = "float32"   # Adam moment dtype (bf16 for 405B)
+    grad_accum_dtype: str = "float32"  # accumulation buffer dtype
+    seq_parallel: bool = False         # shard residual-stream seq over TP
+    tie_embeddings: bool = False
+    remat: bool = True
+    scan_layers: bool = True           # scan over uniform stacks
+    attn_q_block: int = 512            # query-chunk size (flash-style XLA path)
+
+    # ------------------------------------------------------------------
+    def blocks(self) -> tuple:
+        p = self.block_pattern
+        return tuple(p[i % len(p)] for i in range(self.n_layers))
+
+    @property
+    def uniform_stack(self) -> bool:
+        return len(set(self.block_pattern)) == 1
+
+    @property
+    def attn_q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def sub_quadratic(self) -> bool:
+        kinds = set(self.blocks())
+        return "attn" not in kinds
+
+    @property
+    def has_decode(self) -> bool:
+        return self.causal
+
+    def compute_dtype(self):
+        return DTYPES[self.dtype]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str            # train|prefill|decode
+    seq_len: int
+    global_batch: int
+    microbatches: int = 1     # gradient-accumulation steps (train only)
+
+    @property
+    def is_train(self) -> bool:
+        return self.kind == "train"
+
+
+# The assigned input-shape set (identical for all ten LM-family archs).
+def standard_shapes(train_micro: int = 1) -> dict:
+    return {
+        "train_4k": ShapeSpec("train_4k", "train", 4096, 256, train_micro),
+        "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+        "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+        "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+    }
+
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """Whether a (arch, shape) dry-run cell applies (DESIGN.md §5 skips)."""
+    if shape.kind == "decode" and not cfg.has_decode:
+        return False, "encoder-only arch has no decode step"
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "full-attention arch skipped at 500k (quadratic)"
+    return True, ""

@@ -1,0 +1,395 @@
+"""Transformer building blocks: norm, RoPE, GQA attention, gated FFN.
+
+All matmuls run in the config compute dtype (bf16) with fp32 accumulation;
+softmax and norms run in fp32.  Attention is written flash-style in pure
+jnp/lax (blocked over query chunks, online against the full K for the chunk)
+so the dry-run memory analysis reflects an O(S·chunk) working set — the
+Pallas kernels in :mod:`repro.kernels` are drop-in replacements of the same
+math for real TPUs.
+
+Parameter trees are built from a *schema*: a pytree of :class:`PSpec`
+(shape, logical axes, init) leaves; the same schema drives initialization,
+``jax.eval_shape`` abstract params for the dry-run, and sharding specs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import constrain
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class PSpec:
+    """Parameter/cache leaf spec: shape + logical axes + init recipe.
+
+    A plain (unregistered) dataclass so jax.tree treats it as a leaf.
+    init: ("normal", scale) | ("zeros",) | ("ones",) | ("const", c)
+    """
+
+    shape: tuple
+    axes: tuple
+    init: tuple = ("normal", 1.0)
+
+
+def _f32(x):
+    return x.astype(jnp.float32)
+
+
+def ein(eq, *args, dtype):
+    """Projection einsum in the compute dtype.
+
+    ``preferred_element_type=dtype`` (not fp32): the MXU accumulates fp32
+    *within* a shard regardless, but emitting the requested dtype means
+    GSPMD's cross-shard partial-sum all-reduces move bf16, not fp32 —
+    iteration 2 of EXPERIMENTS.md §Perf halved most TP collective bytes
+    this way.  Loss/logits paths pass dtype=float32 explicitly.
+    """
+    return jnp.einsum(eq, *args, preferred_element_type=dtype).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms & embeddings
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps):
+    xf = _f32(x)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + _f32(scale))
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta):
+    """x: [B, S, H, dh]; positions: [B, S] (absolute)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # [B,S,half]
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    sin = sin[:, :, None, :]
+    cos = cos[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    x1f, x2f = _f32(x1), _f32(x2)
+    # Cast the halves *before* the concat: the concat result is what GSPMD
+    # reshards (seq-shard -> head-shard all-to-all); emitting bf16 halves
+    # that traffic (EXPERIMENTS.md §Perf iteration 3a).
+    out = jnp.concatenate(
+        [(x1f * cos - x2f * sin).astype(x.dtype),
+         (x2f * cos + x1f * sin).astype(x.dtype)], axis=-1)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Attention (training / prefill: blocked over query chunks)
+# ---------------------------------------------------------------------------
+
+def _attend_block(q, k, v, q_start, kv_start, causal, window, lengths, dtype):
+    """q: [B,Tq,H,dh] vs k,v: [B,Tk,H,dh] -> [B,Tq,H,dh] (fp32 softmax).
+
+    Head-major einsums keep one 'model'-sharded head dim end-to-end.  The
+    earlier grouped formulation (reshape H -> (K, g)) split the sharded head
+    axis across two tensor dims and GSPMD fell back to *involuntary full
+    rematerialization* in the attention backward — all-gathering fp32 score
+    tensors (3 x 128 GiB per layer at llama3-405b/train_4k; EXPERIMENTS.md
+    §Perf iteration 1).
+    """
+    scores = jnp.einsum("bthd,bshd->bhts", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / np.sqrt(q.shape[-1])
+    tq, tk = q.shape[1], k.shape[1]
+    iq = q_start + jnp.arange(tq)[:, None]           # [tq,1]
+    jk = kv_start + jnp.arange(tk)[None, :]          # [1,tk]
+    mask = jnp.ones((tq, tk), bool)
+    if causal:
+        mask = jk <= iq
+        if window:
+            mask = jnp.logical_and(mask, jk > iq - window)
+    if lengths is not None:                          # [B] valid kv lengths
+        mask = jnp.logical_and(mask[None], (jk[None] < lengths[:, None, None]))
+        mask = mask[:, None]                         # [B,1,tq,tk]
+    else:
+        mask = mask[None, None]                      # [1,1,tq,tk]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhts,bshd->bthd", probs.astype(dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(dtype)
+
+
+def _expand_kv(kv, g):
+    """[B,T,K,dh] -> [B,T,K*g,dh]: q head h attends kv head h // g.
+
+    Under the 'model'-sharded q-head layout each device materializes only
+    its own head slice, so the repeat costs no cross-device communication —
+    it exists to hand GSPMD a single clean head axis.
+    """
+    if g == 1:
+        return kv
+    return jnp.repeat(kv, g, axis=2)
+
+
+def attention(q, k, v, *, causal, window=0, q_offset=0, lengths=None,
+              q_block=512, dtype=jnp.bfloat16):
+    """GQA attention. q: [B,S,H,dh]; k,v: [B,T,K,dh]."""
+    b, s, h, dh = q.shape
+    g = h // k.shape[2]
+    # No explicit constraint on the expanded kv: GSPMD propagates the
+    # q-side head sharding into the repeat (a local slice of the
+    # replicated K heads); constraining it forced H-sized reshards at
+    # prefill (§Perf iteration 4: llama3 prefill 67.1s -> re-measured).
+    k = _expand_kv(k, g)
+    v = _expand_kv(v, g)
+    while s % q_block:
+        q_block //= 2
+
+    if s <= q_block:
+        return _attend_block(q, k, v, q_offset, 0, causal, window, lengths,
+                             dtype)
+
+    nb = s // q_block
+    qb = q.reshape(b, nb, q_block, h, dh).transpose(1, 0, 2, 3, 4)
+
+    if causal and window and window < k.shape[1]:
+        # Local attention: each q block only sees a K slice of
+        # window + q_block positions ending at the block's last query.
+        kv_span = window + q_block
+
+        def blk(i, qi):
+            q_start = i * q_block
+            kv_start = jnp.maximum(q_start + q_block - kv_span, 0)
+            ks = jax.lax.dynamic_slice_in_dim(k, kv_start, kv_span, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(v, kv_start, kv_span, axis=1)
+            return _attend_block(qi, ks, vs, q_offset + q_start,
+                                 kv_start + q_offset, causal, window,
+                                 None, dtype)
+    else:
+        def blk(i, qi):
+            q_start = i * q_block
+            return _attend_block(qi, k, v, q_offset + q_start, 0, causal,
+                                 window, lengths, dtype)
+
+    def body(_, xs):
+        i, qi = xs
+        return None, blk(i, qi)
+
+    _, outs = jax.lax.scan(body, None, (jnp.arange(nb), qb))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dh)
+
+
+def cache_slot_positions(last_pos, t_cache):
+    """Absolute position held by each ring slot after writing ``last_pos``.
+
+    Slot s holds the largest p <= last_pos with p == s (mod t_cache);
+    slots never written (s > last_pos on a cold cache) come out negative.
+    For a non-ring cache (t_cache >= seq) this degenerates to
+    positions == slot indices with the unwritten tail negative.
+    """
+    s = jnp.arange(t_cache)
+    return last_pos - jnp.mod(last_pos - s, t_cache)
+
+
+def decode_attention(q, k_cache, v_cache, valid_mask, *, dtype=jnp.bfloat16):
+    """Single-token attention against the cache.
+
+    q: [B,1,H,dh]; caches: [B,T,K,dh]; valid_mask: [B,T] bool (position-
+    aware: ring slots holding out-of-window positions are masked by the
+    caller).  With a sequence-sharded cache (kv_seq -> 'model') GSPMD turns
+    the softmax/out reductions into small psums — split-K decode over TP.
+    """
+    b, _, h, dh = q.shape
+    kheads = k_cache.shape[2]
+    g = h // kheads
+    qg = q.reshape(b, 1, kheads, g, dh)
+    scores = jnp.einsum("btkgd,bskd->bkgts", qg, k_cache,
+                        preferred_element_type=jnp.float32)
+    scores = scores / np.sqrt(dh)
+    scores = jnp.where(valid_mask[:, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgts,bskd->btkgd", probs.astype(dtype), v_cache,
+                     preferred_element_type=jnp.float32).astype(dtype)
+    return out.reshape(b, 1, h, dh)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (params schema + apply)
+# ---------------------------------------------------------------------------
+
+def attn_schema(cfg: ModelConfig, *, local: bool) -> dict:
+    d, h, k, dh, f = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                      cfg.d_ff)
+    s = 1.0 / np.sqrt(d)
+    sch = {
+        "ln1": PSpec((d,), ("norm",), ("zeros",)),
+        "wq": PSpec((d, h, dh), ("embed", "q_heads", "head_dim"), ("normal", s)),
+        "wk": PSpec((d, k, dh), ("embed", "kv_heads", "head_dim"), ("normal", s)),
+        "wv": PSpec((d, k, dh), ("embed", "kv_heads", "head_dim"), ("normal", s)),
+        "wo": PSpec((h, dh, d), ("q_heads", "head_dim", "embed"),
+                    ("normal", 1.0 / np.sqrt(h * dh))),
+        "ln2": PSpec((d,), ("norm",), ("zeros",)),
+    }
+    if cfg.qkv_bias:
+        sch["bq"] = PSpec((h, dh), ("q_heads", "head_dim"), ("zeros",))
+        sch["bk"] = PSpec((k, dh), ("kv_heads", "head_dim"), ("zeros",))
+        sch["bv"] = PSpec((k, dh), ("kv_heads", "head_dim"), ("zeros",))
+    if cfg.n_experts:
+        from repro.models.moe import moe_schema
+        sch["moe"] = moe_schema(cfg)
+    else:
+        sch["mlp"] = mlp_schema(d, f, cfg.activation)
+    return sch
+
+
+def mlp_schema(d, f, activation) -> dict:
+    s_in, s_out = 1.0 / np.sqrt(d), 1.0 / np.sqrt(f)
+    sch = {"wi": PSpec((d, f), ("embed", "ff"), ("normal", s_in)),
+           "wo": PSpec((f, d), ("ff", "embed"), ("normal", s_out))}
+    if activation in ("swiglu", "geglu"):
+        sch["wg"] = PSpec((d, f), ("embed", "ff"), ("normal", s_in))
+    return sch
+
+
+def mlp_apply(p, x, activation, dtype):
+    h = ein("bsd,df->bsf", x, p["wi"].astype(dtype), dtype=dtype)
+    if activation in ("swiglu", "geglu"):
+        g = ein("bsd,df->bsf", x, p["wg"].astype(dtype), dtype=dtype)
+        act = jax.nn.silu if activation == "swiglu" else \
+            (lambda t: jax.nn.gelu(t, approximate=True))
+        h = act(_f32(g)).astype(dtype) * h
+    else:
+        h = jax.nn.gelu(_f32(h), approximate=True).astype(dtype)
+    h = constrain(h, "batch", "seq", "ff")
+    return ein("bsf,fd->bsd", h, p["wo"].astype(dtype), dtype=dtype)
+
+
+def _qkv(p, x, cfg: ModelConfig, positions, dtype):
+    q = ein("bsd,dhk->bshk", x, p["wq"].astype(dtype), dtype=dtype)
+    k = ein("bsd,dmk->bsmk", x, p["wk"].astype(dtype), dtype=dtype)
+    v = ein("bsd,dmk->bsmk", x, p["wv"].astype(dtype), dtype=dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dtype)
+        k = k + p["bk"].astype(dtype)
+        v = v + p["bv"].astype(dtype)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", "seq", "q_heads", "head_dim")
+    k = constrain(k, "batch", "seq", "kv_heads", "head_dim")
+    v = constrain(v, "batch", "seq", "kv_heads", "head_dim")
+    return q, k, v
+
+
+def attn_block_apply(p, x, cfg: ModelConfig, *, local: bool, positions,
+                     q_offset=0):
+    """Full residual block (train/prefill, no cache). x: [B,S,D]."""
+    dtype = cfg.compute_dtype()
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = _qkv(p, h, cfg, positions, dtype)
+    window = cfg.local_window if local else 0
+    out = attention(q, k, v, causal=cfg.causal, window=window,
+                    q_offset=q_offset, q_block=cfg.attn_q_block, dtype=dtype)
+    out = ein("bshk,hkd->bsd", out, p["wo"].astype(dtype), dtype=dtype)
+    x = x + constrain(out, "batch", "seq_res", "act_embed")
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.n_experts:
+        from repro.models.moe import moe_apply
+        y, _aux = moe_apply(p["moe"], h2, cfg)
+    else:
+        y = mlp_apply(p["mlp"], h2, cfg.activation, dtype)
+    return x + constrain(y, "batch", "seq_res", "act_embed")
+
+
+def attn_block_prefill(p, x, cfg, *, local, positions, cache):
+    """Like apply, but also fills the KV cache; returns (x, cache)."""
+    dtype = cfg.compute_dtype()
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = _qkv(p, h, cfg, positions, dtype)
+    window = cfg.local_window if local else 0
+    t_cache = cache["k"].shape[1]
+    s = k.shape[1]
+    if s >= t_cache:
+        # Keep the trailing window, rolled so position p sits at slot
+        # p % t_cache — the ring invariant decode relies on (the next
+        # write slot s % t_cache then overwrites the oldest entry).
+        knew = jnp.roll(k[:, s - t_cache:], shift=s % t_cache, axis=1)
+        vnew = jnp.roll(v[:, s - t_cache:], shift=s % t_cache, axis=1)
+        cache = {"k": knew.astype(cache["k"].dtype),
+                 "v": vnew.astype(cache["v"].dtype)}
+    else:
+        cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), 0, axis=1),
+            "v": jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), 0, axis=1),
+        }
+    cache = {kk: constrain(vv, "cache_batch", "kv_seq", "kv_heads",
+                           "head_dim") for kk, vv in cache.items()}
+    out = attention(q, k, v, causal=cfg.causal, window=window,
+                    q_offset=0, q_block=cfg.attn_q_block, dtype=dtype)
+    out = ein("bshk,hkd->bsd", out, p["wo"].astype(dtype), dtype=dtype)
+    x = x + constrain(out, "batch", "seq_res", "act_embed")
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.n_experts:
+        from repro.models.moe import moe_apply
+        y, _ = moe_apply(p["moe"], h2, cfg)
+    else:
+        y = mlp_apply(p["mlp"], h2, cfg.activation, dtype)
+    return x + constrain(y, "batch", "seq_res", "act_embed"), cache
+
+
+def attn_block_decode(p, x, cfg, *, local, positions, cache, lengths):
+    """One-token step. x: [B,1,D]; cache k/v: [B,T,K,dh] (T may be a ring)."""
+    dtype = cfg.compute_dtype()
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = _qkv(p, h, cfg, positions, dtype)
+    t_cache = cache["k"].shape[1]
+    # Ring-buffer write position: lengths mod cache size (full caches ring).
+    slot = (lengths[0] % t_cache).astype(jnp.int32)
+    kc = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+    kc = constrain(kc, "cache_batch", "kv_seq", "kv_heads", "head_dim")
+    vc = constrain(vc, "cache_batch", "kv_seq", "kv_heads", "head_dim")
+    # Position-aware validity: which absolute position each slot holds
+    # after this write, masked causally and (for local blocks) to the
+    # window.  Batch decodes at a shared position (lengths[0]), as
+    # documented for the benchmark serve step.
+    pos = cache_slot_positions(lengths[0], t_cache)      # [T]
+    valid = jnp.logical_and(pos >= 0, pos <= lengths[0])
+    if local and cfg.local_window:
+        valid = jnp.logical_and(valid,
+                                pos > lengths[0] - cfg.local_window)
+    valid = jnp.broadcast_to(valid[None], (x.shape[0], t_cache))
+    out = decode_attention(q, kc.astype(dtype), vc.astype(dtype), valid,
+                           dtype=dtype)
+    out = ein("bshk,hkd->bsd", out, p["wo"].astype(dtype), dtype=dtype)
+    x = x + out
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.n_experts:
+        from repro.models.moe import moe_apply
+        y, _ = moe_apply(p["moe"], h2, cfg)
+    else:
+        y = mlp_apply(p["mlp"], h2, cfg.activation, dtype)
+    return x + y, {"k": kc, "v": vc}
+
+
+def attn_cache_schema(cfg: ModelConfig, batch: int, t_cache: int,
+                      local: bool) -> dict:
+    if local and cfg.local_window:
+        t_cache = min(t_cache, cfg.local_window + 1)
+    return {
+        "k": PSpec((batch, t_cache, cfg.n_kv_heads, cfg.head_dim),
+                   ("cache_batch", "kv_seq", "kv_heads", "head_dim"),
+                   ("zeros",)),
+        "v": PSpec((batch, t_cache, cfg.n_kv_heads, cfg.head_dim),
+                   ("cache_batch", "kv_seq", "kv_heads", "head_dim"),
+                   ("zeros",)),
+    }

@@ -1,0 +1,347 @@
+"""Unified LM: schema-driven parameters, forward / prefill / decode steps.
+
+One :class:`~repro.models.config.ModelConfig` instantiates any of the ten
+assigned architectures: a per-layer *block pattern* picks the mixer
+("attn" | "local_attn" | "rglru" | "mlstm" | "slstm"); uniform stacks are
+``lax.scan``-ed over stacked parameters (compile-time control at 126 layers),
+mixed stacks unroll.  Modality frontends are stubs per the assignment:
+``audio_stub`` consumes precomputed frame embeddings, ``vision_stub``
+prepends precomputed patch embeddings to the token embeddings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import constrain, current_rules
+from repro.models import rglru, xlstm
+from repro.models.config import DTYPES, ModelConfig
+from repro.models.layers import (PSpec, attn_block_apply, attn_block_decode,
+                                 attn_block_prefill, attn_cache_schema,
+                                 attn_schema, ein, rms_norm)
+
+BLOCK_SCHEMAS = {
+    "attn": lambda cfg: attn_schema(cfg, local=False),
+    "local_attn": lambda cfg: attn_schema(cfg, local=True),
+    "rglru": rglru.rglru_schema,
+    "mlstm": xlstm.mlstm_schema,
+    "slstm": xlstm.slstm_schema,
+}
+
+BLOCK_APPLY = {
+    "attn": partial(attn_block_apply, local=False),
+    "local_attn": partial(attn_block_apply, local=True),
+    "rglru": rglru.rglru_block_apply,
+    "mlstm": xlstm.mlstm_block_apply,
+    "slstm": xlstm.slstm_block_apply,
+}
+
+BLOCK_PREFILL = {
+    "attn": partial(attn_block_prefill, local=False),
+    "local_attn": partial(attn_block_prefill, local=True),
+    "rglru": rglru.rglru_block_prefill,
+    "mlstm": xlstm.mlstm_block_prefill,
+    "slstm": xlstm.slstm_block_prefill,
+}
+
+BLOCK_DECODE = {
+    "attn": partial(attn_block_decode, local=False),
+    "local_attn": partial(attn_block_decode, local=True),
+    "rglru": rglru.rglru_block_decode,
+    "mlstm": xlstm.mlstm_block_decode,
+    "slstm": xlstm.slstm_block_decode,
+}
+
+
+def _is_pspec(x):
+    return isinstance(x, PSpec)
+
+
+def _cache_schema_for(kind, cfg, batch, t_cache):
+    if kind in ("attn", "local_attn"):
+        return attn_cache_schema(cfg, batch, t_cache, kind == "local_attn")
+    if kind == "rglru":
+        return rglru.rglru_cache_schema(cfg, batch)
+    if kind == "mlstm":
+        return xlstm.mlstm_cache_schema(cfg, batch)
+    if kind == "slstm":
+        return xlstm.slstm_cache_schema(cfg, batch)
+    raise KeyError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Schema / init / sharding specs
+# ---------------------------------------------------------------------------
+
+def _scanned(cfg: ModelConfig) -> bool:
+    return cfg.scan_layers and cfg.uniform_stack and cfg.n_layers > 1
+
+
+def _stack(schema, n):
+    return jax.tree.map(
+        lambda ps: PSpec((n,) + tuple(ps.shape), ("layers",) + tuple(ps.axes),
+                         ps.init),
+        schema, is_leaf=_is_pspec)
+
+
+def build_schema(cfg: ModelConfig) -> dict:
+    d, v = cfg.d_model, cfg.vocab
+    sch = {}
+    if cfg.frontend != "audio_stub":
+        sch["embed"] = PSpec((v, d), ("vocab", "embed"), ("normal", 1.0))
+    sch["final_ln"] = PSpec((d,), ("norm",), ("zeros",))
+    if not cfg.tie_embeddings or cfg.frontend == "audio_stub":
+        sch["unembed"] = PSpec((d, v), ("embed", "vocab"),
+                               ("normal", 1.0 / np.sqrt(d)))
+    blocks = cfg.blocks()
+    if _scanned(cfg):
+        sch["layers"] = _stack(BLOCK_SCHEMAS[blocks[0]](cfg), cfg.n_layers)
+    else:
+        sch["blocks"] = [BLOCK_SCHEMAS[k](cfg) for k in blocks]
+    return sch
+
+
+def _init_leaf(ps: PSpec, key, dtype):
+    kind = ps.init[0]
+    if kind == "normal":
+        return (jax.random.normal(key, ps.shape, jnp.float32)
+                * ps.init[1]).astype(dtype)
+    if kind == "zeros":
+        return jnp.zeros(ps.shape, dtype)
+    if kind == "ones":
+        return jnp.ones(ps.shape, dtype)
+    if kind == "const":
+        return jnp.full(ps.shape, ps.init[1], dtype)
+    raise ValueError(kind)
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    schema = build_schema(cfg)
+    leaves, treedef = jax.tree.flatten(schema, is_leaf=_is_pspec)
+    keys = jax.random.split(jax.random.PRNGKey(seed), max(len(leaves), 1))
+    dtype = DTYPES[cfg.param_dtype]
+    vals = [_init_leaf(ps, k, dtype) for ps, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(cfg: ModelConfig):
+    dtype = DTYPES[cfg.param_dtype]
+    return jax.tree.map(
+        lambda ps: jax.ShapeDtypeStruct(ps.shape, dtype),
+        build_schema(cfg), is_leaf=_is_pspec)
+
+
+def tree_pspecs(schema_tree, rules):
+    """Map a PSpec tree -> PartitionSpec tree under the given rules
+    (shape-aware: non-divisible dims degrade to replicated)."""
+    return jax.tree.map(lambda ps: rules.spec(ps.axes, ps.shape),
+                        schema_tree, is_leaf=_is_pspec)
+
+
+def param_pspecs(cfg: ModelConfig, rules):
+    return tree_pspecs(build_schema(cfg), rules)
+
+
+# ---------------------------------------------------------------------------
+# Cache
+# ---------------------------------------------------------------------------
+
+def cache_schema(cfg: ModelConfig, batch: int, t_cache: int):
+    blocks = cfg.blocks()
+    if _scanned(cfg):
+        return _stack(_cache_schema_for(blocks[0], cfg, batch, t_cache),
+                      cfg.n_layers)
+    return [_cache_schema_for(k, cfg, batch, t_cache) for k in blocks]
+
+
+def _cache_leaf_dtype(cfg: ModelConfig, ps: PSpec):
+    # KV entries in compute dtype, recurrent states fp32.
+    if ps.init[0] == "zeros" and len(ps.shape) >= 4 and \
+            ps.axes[-1] == "head_dim":
+        return cfg.compute_dtype()
+    return jnp.float32
+
+
+def init_cache(cfg: ModelConfig, batch: int, t_cache: int):
+    def leaf(ps: PSpec):
+        if ps.init[0] == "const":
+            return jnp.full(ps.shape, ps.init[1], jnp.float32)
+        return jnp.zeros(ps.shape, _cache_leaf_dtype(cfg, ps))
+
+    return jax.tree.map(leaf, cache_schema(cfg, batch, t_cache),
+                        is_leaf=_is_pspec)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, t_cache: int):
+    """ShapeDtypeStructs only — NEVER allocates (dry-run caches are TBs)."""
+    def leaf(ps: PSpec):
+        dt = jnp.float32 if ps.init[0] == "const" \
+            else _cache_leaf_dtype(cfg, ps)
+        return jax.ShapeDtypeStruct(ps.shape, dt)
+
+    return jax.tree.map(leaf, cache_schema(cfg, batch, t_cache),
+                        is_leaf=_is_pspec)
+
+
+def cache_pspecs(cfg: ModelConfig, batch: int, t_cache: int, rules):
+    return tree_pspecs(cache_schema(cfg, batch, t_cache), rules)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def _embed_tokens(params, cfg: ModelConfig, tokens):
+    dtype = cfg.compute_dtype()
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    if cfg.emb_scale:
+        x = x * np.sqrt(cfg.d_model)
+    return x
+
+
+def _inputs_to_x(params, cfg: ModelConfig, batch):
+    """Assemble the layer-0 input from the modality-specific batch dict."""
+    dtype = cfg.compute_dtype()
+    if cfg.frontend == "audio_stub":
+        x = batch["frames"].astype(dtype)
+    elif cfg.frontend == "vision_stub":
+        x = _embed_tokens(params, cfg, batch["tokens"])
+        patches = batch["patch_embeds"].astype(dtype)
+        x = jnp.concatenate([patches, x], axis=1)
+    else:
+        x = _embed_tokens(params, cfg, batch["tokens"])
+    return constrain(x, "batch", "seq_res", "act_embed")
+
+
+def _unembed(params, cfg: ModelConfig, x):
+    dtype = cfg.compute_dtype()
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    if "unembed" in params:
+        logits = ein("bsd,dv->bsv", x, params["unembed"].astype(dtype),
+                     dtype=jnp.float32)
+    else:
+        logits = ein("bsd,vd->bsv", x, params["embed"].astype(dtype),
+                     dtype=jnp.float32)
+    if cfg.logits_softcap:
+        c = cfg.logits_softcap
+        logits = c * jnp.tanh(logits / c)
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+# ---------------------------------------------------------------------------
+# Forward (training)
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ModelConfig, batch):
+    """-> fp32 logits [B, S, V]."""
+    x = _inputs_to_x(params, cfg, batch)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    blocks = cfg.blocks()
+
+    if _scanned(cfg):
+        fn = BLOCK_APPLY[blocks[0]]
+
+        def body(xc, lp):
+            return fn(lp, xc, cfg, positions=positions), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, params["layers"])
+    else:
+        for lp, kind in zip(params["blocks"], blocks):
+            fn = BLOCK_APPLY[kind]
+            if cfg.remat:
+                fn = jax.checkpoint(
+                    lambda p_, x_, f=BLOCK_APPLY[kind]:
+                    f(p_, x_, cfg, positions=positions), prevent_cse=False)
+                x = fn(lp, x)
+            else:
+                x = fn(lp, x, cfg, positions=positions)
+    return _unembed(params, cfg, x)
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode (serving)
+# ---------------------------------------------------------------------------
+
+def prefill(params, cfg: ModelConfig, batch, cache):
+    """Fill the cache from a prompt; -> (last-token logits [B,1,V], cache)."""
+    x = _inputs_to_x(params, cfg, batch)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    blocks = cfg.blocks()
+
+    if _scanned(cfg):
+        fn = BLOCK_PREFILL[blocks[0]]
+
+        def body(xc, xs):
+            lp, lc = xs
+            xo, nc = fn(lp, xc, cfg, positions=positions, cache=lc)
+            return xo, nc
+
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    else:
+        new_cache = []
+        for lp, lc, kind in zip(params["blocks"], cache, blocks):
+            x, nc = BLOCK_PREFILL[kind](lp, x, cfg, positions=positions,
+                                        cache=lc)
+            new_cache.append(nc)
+    logits = _unembed(params, cfg, x[:, -1:])
+    return logits, new_cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, lengths, cache):
+    """One token for every sequence. tokens [B,1]; lengths [B] (positions)."""
+    x = _embed_tokens(params, cfg, tokens) if cfg.frontend != "audio_stub" \
+        else tokens  # encoder-only archs never reach here
+    x = constrain(x, "batch", "seq", "act_embed")
+    positions = lengths[:, None].astype(jnp.int32)
+    blocks = cfg.blocks()
+
+    if _scanned(cfg):
+        fn = BLOCK_DECODE[blocks[0]]
+
+        def body(xc, xs):
+            lp, lc = xs
+            xo, nc = fn(lp, xc, cfg, positions=positions, cache=lc,
+                        lengths=lengths)
+            return xo, nc
+
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    else:
+        new_cache = []
+        for lp, lc, kind in zip(params["blocks"], cache, blocks):
+            x, nc = BLOCK_DECODE[kind](lp, x, cfg, positions=positions,
+                                       cache=lc, lengths=lengths)
+            new_cache.append(nc)
+    logits = _unembed(params, cfg, x)
+    return logits, new_cache, lengths + 1
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits, labels):
+    """Vocab-sharded-safe CE. logits fp32 [B,S,V]; labels [B,S] (-1 = pad)."""
+    v = logits.shape[-1]
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    onehot = jax.nn.one_hot(jnp.maximum(labels, 0), v, dtype=jnp.float32)
+    correct = jnp.sum(shifted * onehot, axis=-1) + m[..., 0]
+    w = (labels >= 0).astype(jnp.float32)
+    nll = (lse - correct) * w
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    logits = forward(params, cfg, batch)
+    loss = cross_entropy(logits, batch["labels"])
+    return loss, {"loss": loss}

@@ -1,0 +1,182 @@
+"""Capacity-based top-k MoE (GShard-style) with GSPMD-friendly dispatch.
+
+The [tokens, experts, capacity] one-hot dispatch tensor of the original
+GShard formulation is quadratically large at our shapes, so dispatch is done
+as a *local permutation per data shard*:
+
+* inside ``shard_map`` over the data axes (token dim): local top-k routing,
+  position-in-expert via a cumulative one-hot (small: T_loc·k × E), and a
+  scatter-add into a local ``[E, C_loc, D]`` buffer (tokens over local
+  capacity are dropped — the paper-standard "token dropping" with
+  ``capacity_factor`` headroom);
+* *outside* shard_map, the expert FFN runs as plain batched einsums so GSPMD
+  applies the usual FSDP/TP sharding to the expert weights (ff over 'model',
+  embed over 'data'), exactly like the dense FFN path;
+* a second local shard_map gathers and gate-combines the outputs.
+
+Off-mesh (smoke tests) the same local functions run directly.  With
+``expert_parallel`` rules, the expert dim of the buffers/weights shards over
+'data' instead and GSPMD inserts the all-to-alls.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import current_rules
+from repro.models.config import ModelConfig
+
+try:  # jax >= 0.6 public API
+    from jax import shard_map as _shard_map
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _shard_map_old(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=False)
+
+
+def moe_schema(cfg: ModelConfig) -> dict:
+    from repro.models.layers import PSpec  # local import (cycle)
+
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    s_in, s_out = 1.0 / np.sqrt(d), 1.0 / np.sqrt(f)
+    sch = {
+        "router": PSpec((d, e), ("norm", "norm2"), ("normal", s_in)),
+        "w1": PSpec((e, d, f), ("experts", "embed", "ff"), ("normal", s_in)),
+        "w2": PSpec((e, f, d), ("experts", "ff", "embed"), ("normal", s_out)),
+    }
+    if cfg.activation in ("swiglu", "geglu"):
+        sch["wg"] = PSpec((e, d, f), ("experts", "embed", "ff"),
+                          ("normal", s_in))
+    return sch
+
+
+def _capacity(tokens_local: int, cfg: ModelConfig) -> int:
+    cap = int(math.ceil(tokens_local * cfg.top_k * cfg.capacity_factor
+                        / cfg.n_experts))
+    return max(8, -(-cap // 8) * 8)  # round up to 8
+
+
+def _route_local(x, router, cfg: ModelConfig, capacity: int):
+    """x: [T, D] local tokens -> dispatch buffer + combine metadata."""
+    t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    logits = jnp.einsum("td,de->te", x, router.astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)          # [T,E] fp32
+    gate, idx = jax.lax.top_k(probs, k)              # [T,k]
+    gate = gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)
+
+    # Position in expert: priority order = (slot k, then token order), the
+    # GShard convention (first choices beat second choices).
+    idx_f = idx.transpose(1, 0).reshape(-1)          # [k*T], k-major
+    onehot = jax.nn.one_hot(idx_f, e, dtype=jnp.int32)     # [k*T, E]
+    pos_f = jnp.cumsum(onehot, axis=0) - onehot      # positions before me
+    pos_f = jnp.sum(pos_f * onehot, axis=-1)         # [k*T]
+    keep_f = pos_f < capacity
+    pos = pos_f.reshape(k, t).transpose(1, 0)        # [T,k]
+    keep = keep_f.reshape(k, t).transpose(1, 0)      # [T,k]
+
+    # Scatter tokens into [E, C, D].
+    buf = jnp.zeros((e, capacity, d), x.dtype)
+    e_flat = idx.reshape(-1)
+    p_flat = jnp.where(keep, pos, capacity - 1).reshape(-1)
+    w_flat = keep.reshape(-1)
+    contrib = jnp.repeat(x, k, axis=0) * w_flat[:, None].astype(x.dtype)
+    buf = buf.at[e_flat, p_flat].add(contrib)
+
+    # Aux load-balance loss terms (GShard): mean fraction & mean prob.
+    density = jnp.mean(jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32), 0)
+    prob_mean = jnp.mean(probs, axis=0)
+    aux = jnp.sum(density * prob_mean) * e
+    return buf, (idx, pos, keep, gate), aux
+
+
+def _combine_local(out_buf, meta, dtype):
+    idx, pos, keep, gate = meta
+    # out_buf: [E, C, D]; gather each (token, k) slot and gate-combine.
+    y = out_buf[idx, pos]                            # [T,k,D]
+    w = (gate * keep).astype(jnp.float32)
+    return jnp.einsum("tkd,tk->td", y.astype(jnp.float32), w).astype(dtype)
+
+
+def moe_apply(p, x, cfg: ModelConfig):
+    """x: [B,S,D] -> ([B,S,D], aux_loss scalar)."""
+    dtype = cfg.compute_dtype()
+    b, s, d = x.shape
+    xf = x.reshape(b * s, d)
+    rules = current_rules()
+
+    # Weight-stationary decode replicates the token batch: routing/dispatch
+    # are tiny and run replicated; only the expert einsums (against the
+    # stationary 2D-sharded weights) touch sharded dims.
+    ws_decode = rules is not None and rules.table.get("batch") is None
+
+    if rules is None or rules.mesh is None or ws_decode:
+        cap = _capacity(b * s, cfg)
+        buf, meta, aux = _route_local(xf, p["router"], cfg, cap)
+        out_buf = _expert_ffn(p, buf, cfg, dtype)
+        y = _combine_local(out_buf, meta, dtype)
+        return y.reshape(b, s, d), aux
+
+    mesh = rules.mesh
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    shards = int(np.prod([mesh.shape[a] for a in data_axes])) if data_axes else 1
+    t_local = (b * s) // shards
+    cap = _capacity(t_local, cfg)
+    P = jax.sharding.PartitionSpec
+
+    def dispatch(xl, router):
+        buf, meta, aux = _route_local(xl, router, cfg, cap)
+        return buf, meta, aux[None]
+
+    buf, meta, aux = shard_map(
+        dispatch, mesh,
+        in_specs=(P(data_axes, None), P(None, None)),
+        out_specs=(P(None, data_axes, None),
+                   (P(data_axes, None), P(data_axes, None),
+                    P(data_axes, None), P(data_axes, None)),
+                   P(data_axes)))(xf, p["router"].astype(dtype))
+
+    out_buf = _expert_ffn(p, buf, cfg, dtype)
+
+    def combine(ob, idx, pos, keep, gate):
+        return _combine_local(ob, (idx, pos, keep, gate), dtype)
+
+    y = shard_map(
+        combine, mesh,
+        in_specs=(P(None, data_axes, None), P(data_axes, None),
+                  P(data_axes, None), P(data_axes, None),
+                  P(data_axes, None)),
+        out_specs=P(data_axes, None))(out_buf, *meta)
+    return y.reshape(b, s, d), jnp.mean(aux)
+
+
+def _expert_ffn(p, buf, cfg: ModelConfig, dtype):
+    """buf: [E, C, D] -> [E, C, D]; plain einsums => GSPMD shards weights."""
+    from repro.dist.sharding import constrain
+
+    buf = constrain(buf, "experts", "moe_cap", "act_embed")
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w1"].astype(dtype),
+                   preferred_element_type=jnp.float32).astype(dtype)
+    if cfg.activation in ("swiglu", "geglu"):
+        g = jnp.einsum("ecd,edf->ecf", buf, p["wg"].astype(dtype),
+                       preferred_element_type=jnp.float32)
+        act = jax.nn.silu if cfg.activation == "swiglu" else \
+            (lambda v: jax.nn.gelu(v, approximate=True))
+        h = act(g).astype(dtype) * h
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(dtype)
+    h = constrain(h, "experts", "moe_cap", "ff")
+    out = jnp.einsum("ecf,efd->ecd", h, p["w2"].astype(dtype),
+                     preferred_element_type=jnp.float32).astype(dtype)
+    return constrain(out, "experts", "moe_cap", "act_embed")

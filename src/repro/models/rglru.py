@@ -1,0 +1,150 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Residual block = gated linear recurrence mixer + GeGLU MLP::
+
+    gate = gelu(h @ W_gate)                       # [B,S,R]
+    u    = causal_conv1d(h @ W_x)                 # width-4 depthwise
+    r_t  = sigmoid(w_r u + b_r);  i_t = sigmoid(w_i u + b_i)
+    log a_t = -c * softplus(Lambda) * r_t         # c = 8
+    h_t  = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+    y    = (h_t * gate) @ W_out
+
+Training/prefill uses ``jax.lax.associative_scan`` over the sequence
+(parallel-friendly; the Pallas kernel implements a VMEM-tiled variant of the
+same recurrence).  Decode is the single-step update with a carried state —
+O(1) per token, which is what makes ``long_500k`` tractable for this arch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import PSpec, ein, mlp_apply, mlp_schema, rms_norm
+
+_C = 8.0  # Griffin's recurrence-gate temperature
+
+
+def rglru_schema(cfg: ModelConfig) -> dict:
+    d, r, f, cw = cfg.d_model, cfg.rnn_width, cfg.d_ff, cfg.conv_width
+    s = 1.0 / np.sqrt(d)
+    return {
+        "ln1": PSpec((d,), ("norm",), ("zeros",)),
+        "w_gate": PSpec((d, r), ("embed", "rnn"), ("normal", s)),
+        "w_x": PSpec((d, r), ("embed", "rnn"), ("normal", s)),
+        "conv_w": PSpec((cw, r), ("norm", "rnn"), ("normal", 0.5)),
+        "conv_b": PSpec((r,), ("rnn",), ("zeros",)),
+        "w_i": PSpec((r,), ("rnn",), ("ones",)),
+        "b_i": PSpec((r,), ("rnn",), ("zeros",)),
+        "w_r": PSpec((r,), ("rnn",), ("ones",)),
+        "b_r": PSpec((r,), ("rnn",), ("zeros",)),
+        # softplus(-5) ~= 0.0067 -> a ~= exp(-8*0.0067*sigmoid) in (0.95,1)
+        "lam": PSpec((r,), ("rnn",), ("const", -5.0)),
+        "w_out": PSpec((r, d), ("rnn", "embed"), ("normal", 1.0 / np.sqrt(r))),
+        "ln2": PSpec((d,), ("norm",), ("zeros",)),
+        "mlp": mlp_schema(d, f, cfg.activation),
+    }
+
+
+def _causal_conv(u, w, b, prev=None):
+    """Depthwise causal conv: out_t = sum_j w[j] * u_{t-(cw-1-j)} + b.
+
+    u: [B,S,R]; w: [cw,R] (tap cw-1 = current step); prev: [B,cw-1,R]
+    carries the trailing inputs across prefill/decode steps.
+    """
+    s = u.shape[1]
+    cw = w.shape[0]
+    if prev is None:
+        full = jnp.pad(u, ((0, 0), (cw - 1, 0), (0, 0)))
+    else:
+        full = jnp.concatenate([prev.astype(u.dtype), u], axis=1)
+    acc = None
+    for j in range(cw):
+        sl = jax.lax.slice_in_dim(full, j, j + s, axis=1)
+        term = sl * w[j][None, None, :].astype(u.dtype)
+        acc = term if acc is None else acc + term
+    return acc + b[None, None, :].astype(u.dtype)
+
+
+def _gates(p, u):
+    uf = u.astype(jnp.float32)
+    i = jax.nn.sigmoid(uf * p["w_i"] + p["b_i"])
+    r = jax.nn.sigmoid(uf * p["w_r"] + p["b_r"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r      # [B,S,R] fp32
+    a = jnp.exp(log_a)
+    # sqrt(1-a^2) with log1p for stability near a=1.
+    beta = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    return a, beta * (i * uf)
+
+
+def _mixer_train(p, h, cfg, conv_prev=None):
+    dtype = cfg.compute_dtype()
+    gate = jax.nn.gelu(
+        ein("bsd,dr->bsr", h, p["w_gate"].astype(dtype), dtype=dtype)
+        .astype(jnp.float32), approximate=True).astype(dtype)
+    u = ein("bsd,dr->bsr", h, p["w_x"].astype(dtype), dtype=dtype)
+    u = constrain(u, "batch", "seq", "rnn")
+    uc = _causal_conv(u, p["conv_w"], p["conv_b"], conv_prev)
+    a, bterm = _gates(p, uc)
+
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, hseq = jax.lax.associative_scan(comb, (a, bterm), axis=1)
+    hseq = constrain(hseq.astype(dtype), "batch", "seq", "rnn")
+    y = ein("bsr,rd->bsd", hseq * gate, p["w_out"].astype(dtype), dtype=dtype)
+    state = {"h": hseq[:, -1].astype(jnp.float32),
+             "conv": u[:, -(cfg.conv_width - 1):].astype(jnp.float32)}
+    return y, state
+
+
+def rglru_block_apply(p, x, cfg: ModelConfig, **_):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    y, _state = _mixer_train(p, h, cfg)
+    x = x + constrain(y, "batch", "seq_res", "act_embed")
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + mlp_apply(p["mlp"], h2, cfg.activation, cfg.compute_dtype())
+
+
+def rglru_block_prefill(p, x, cfg: ModelConfig, *, cache, **_):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    y, state = _mixer_train(p, h, cfg)
+    x = x + constrain(y, "batch", "seq_res", "act_embed")
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + mlp_apply(p["mlp"], h2, cfg.activation, cfg.compute_dtype())
+    return x, state
+
+
+def rglru_block_decode(p, x, cfg: ModelConfig, *, cache, **_):
+    """x: [B,1,D]; cache: {"h": [B,R] f32, "conv": [B,cw-1,R] f32}."""
+    dtype = cfg.compute_dtype()
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    gate = jax.nn.gelu(
+        ein("bsd,dr->bsr", h, p["w_gate"].astype(dtype), dtype=dtype)
+        .astype(jnp.float32), approximate=True).astype(dtype)
+    u = ein("bsd,dr->bsr", h, p["w_x"].astype(dtype), dtype=dtype)
+    uc = _causal_conv(u, p["conv_w"], p["conv_b"], prev=cache["conv"])
+    a, bterm = _gates(p, uc)
+    hnew = a[:, 0] * cache["h"] + bterm[:, 0]        # [B,R] fp32
+    y = ein("bsr,rd->bsd", hnew[:, None].astype(dtype) * gate,
+            p["w_out"].astype(dtype), dtype=dtype)
+    x = x + y
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + mlp_apply(p["mlp"], h2, cfg.activation, dtype)
+    conv_new = jnp.concatenate(
+        [cache["conv"][:, 1:], u.astype(jnp.float32)], axis=1)
+    return x, {"h": hnew, "conv": conv_new}
+
+
+def rglru_cache_schema(cfg: ModelConfig, batch: int) -> dict:
+    r, cw = cfg.rnn_width, cfg.conv_width
+    return {
+        "h": PSpec((batch, r), ("cache_batch", "rnn"), ("zeros",)),
+        "conv": PSpec((batch, cw - 1, r), ("cache_batch", "norm", "rnn"),
+                      ("zeros",)),
+    }

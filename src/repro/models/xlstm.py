@@ -1,0 +1,233 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM.
+
+mLSTM per head (stabilized exponential gating)::
+
+    log f_t = log sigmoid(f̃_t);  m_t = max(log f_t + m_{t-1}, ĩ_t)
+    i' = exp(ĩ_t - m_t);  f' = exp(log f_t + m_{t-1} - m_t)
+    C_t = f' C_{t-1} + i' v_t k_tᵀ          (C: [dh, dh] matrix memory)
+    n_t = f' n_{t-1} + i' k_t
+    h_t = C_t q_t / max(|n_tᵀ q_t|, 1)
+
+sLSTM per head: scalar-gated cell with *recurrent* gate inputs
+(R h_{t-1} terms) — genuinely sequential, so both train and decode run a
+``lax.scan`` over time (the Pallas kernel implements the chunked-parallel
+mLSTM form; this module is the XLA/jnp reference semantics).
+
+Block layout follows the paper: the mLSTM block carries its own SiLU output
+gate + down-projection (no separate FFN; config ``d_ff=0``); the sLSTM block
+is followed by a GeGLU FFN of projection factor 4/3.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import PSpec, ein, mlp_apply, mlp_schema, rms_norm
+
+
+def _slstm_ff(cfg: ModelConfig) -> int:
+    f = int(round(4 * cfg.d_model / 3))
+    return -(-f // 8) * 8
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_schema(cfg: ModelConfig) -> dict:
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    s = 1.0 / np.sqrt(d)
+    return {
+        "ln": PSpec((d,), ("norm",), ("zeros",)),
+        "wq": PSpec((d, h, dh), ("embed", "q_heads", "head_dim"), ("normal", s)),
+        "wk": PSpec((d, h, dh), ("embed", "q_heads", "head_dim"), ("normal", s)),
+        "wv": PSpec((d, h, dh), ("embed", "q_heads", "head_dim"), ("normal", s)),
+        "w_i": PSpec((d, h), ("embed", "q_heads"), ("normal", s)),
+        "b_i": PSpec((h,), ("q_heads",), ("zeros",)),
+        "w_f": PSpec((d, h), ("embed", "q_heads"), ("normal", s)),
+        "b_f": PSpec((h,), ("q_heads",), ("const", 3.0)),  # open forget gates
+        "w_gate": PSpec((d, h, dh), ("embed", "q_heads", "head_dim"),
+                        ("normal", s)),
+        "mhn": PSpec((h, dh), ("q_heads", "head_dim"), ("zeros",)),
+        "w_down": PSpec((h, dh, d), ("q_heads", "head_dim", "embed"),
+                        ("normal", 1.0 / np.sqrt(h * dh))),
+    }
+
+
+def _mlstm_cell(carry, qkvif):
+    """One time step. carry: (C [B,H,dh,dh], n [B,H,dh], m [B,H]) fp32."""
+    C, n, m = carry
+    q, k, v, i_t, f_t = qkvif                      # [B,H,dh], gates [B,H]
+    log_f = -jax.nn.softplus(-f_t)                 # log sigmoid
+    m_new = jnp.maximum(log_f + m, i_t)
+    i_p = jnp.exp(i_t - m_new)[..., None]          # [B,H,1]
+    f_p = jnp.exp(log_f + m - m_new)[..., None]
+    C = f_p[..., None] * C + i_p[..., None] * (v[..., :, None] *
+                                               k[..., None, :])
+    n = f_p * n + i_p * k
+    num = jnp.einsum("bhij,bhj->bhi", C, q)        # C_t q_t
+    den = jnp.abs(jnp.einsum("bhj,bhj->bh", n, q))[..., None]
+    h = num / jnp.maximum(den, 1.0)
+    return (C, n, m_new), h
+
+
+def _mlstm_scan(p, x, cfg: ModelConfig, carry=None):
+    """x: [B,S,D] -> (h [B,S,H,dh], final carry)."""
+    dtype = cfg.compute_dtype()
+    b = x.shape[0]
+    h_, dh = cfg.n_heads, cfg.head_dim
+    q = ein("bsd,dhk->bshk", x, p["wq"].astype(dtype), dtype=jnp.float32)
+    k = ein("bsd,dhk->bshk", x, p["wk"].astype(dtype),
+            dtype=jnp.float32) / np.sqrt(dh)
+    v = ein("bsd,dhk->bshk", x, p["wv"].astype(dtype), dtype=jnp.float32)
+    i_t = ein("bsd,dh->bsh", x, p["w_i"].astype(dtype),
+              dtype=jnp.float32) + p["b_i"]
+    f_t = ein("bsd,dh->bsh", x, p["w_f"].astype(dtype),
+              dtype=jnp.float32) + p["b_f"]
+    if carry is None:
+        carry = (jnp.zeros((b, h_, dh, dh), jnp.float32),
+                 jnp.zeros((b, h_, dh), jnp.float32),
+                 jnp.full((b, h_), -1e30, jnp.float32))
+    xs = tuple(jnp.swapaxes(t, 0, 1) for t in (q, k, v, i_t, f_t))
+    carry, hs = jax.lax.scan(_mlstm_cell, carry, xs)
+    return jnp.swapaxes(hs, 0, 1).astype(dtype), carry
+
+
+def _mlstm_block(p, x, cfg: ModelConfig, carry=None):
+    dtype = cfg.compute_dtype()
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    mixed, carry = _mlstm_scan(p, h, cfg, carry)
+    # Per-head RMS norm then SiLU output gate, then down projection.
+    mixed = rms_norm(mixed, p["mhn"], cfg.norm_eps)
+    gate = ein("bsd,dhk->bshk", h, p["w_gate"].astype(dtype), dtype=dtype)
+    mixed = mixed * jax.nn.silu(gate.astype(jnp.float32)).astype(dtype)
+    y = ein("bshk,hkd->bsd", mixed, p["w_down"].astype(dtype), dtype=dtype)
+    return x + constrain(y, "batch", "seq_res", "act_embed"), carry
+
+
+def mlstm_block_apply(p, x, cfg, **_):
+    y, _c = _mlstm_block(p, x, cfg)
+    return y
+
+
+def mlstm_block_prefill(p, x, cfg, *, cache, **_):
+    y, carry = _mlstm_block(p, x, cfg)
+    C, n, m = carry
+    return y, {"C": C, "n": n, "m": m}
+
+
+def mlstm_block_decode(p, x, cfg, *, cache, **_):
+    carry = (cache["C"], cache["n"], cache["m"])
+    y, carry = _mlstm_block(p, x, cfg, carry)
+    C, n, m = carry
+    return y, {"C": C, "n": n, "m": m}
+
+
+def mlstm_cache_schema(cfg: ModelConfig, batch: int) -> dict:
+    h, dh = cfg.n_heads, cfg.head_dim
+    return {
+        "C": PSpec((batch, h, dh, dh),
+                   ("cache_batch", "q_heads", "head_dim", "norm"), ("zeros",)),
+        "n": PSpec((batch, h, dh), ("cache_batch", "q_heads", "head_dim"),
+                   ("zeros",)),
+        "m": PSpec((batch, h), ("cache_batch", "q_heads"), ("const", -1e30)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_schema(cfg: ModelConfig) -> dict:
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    s = 1.0 / np.sqrt(d)
+    sr = 1.0 / np.sqrt(dh)
+    return {
+        "ln": PSpec((d,), ("norm",), ("zeros",)),
+        "wx": PSpec((d, 4, h, dh), ("embed", "norm", "q_heads", "head_dim"),
+                    ("normal", s)),
+        "r": PSpec((4, h, dh, dh), ("norm", "q_heads", "head_dim", "norm2"),
+                   ("normal", sr)),
+        "b": PSpec((4, h, dh), ("norm", "q_heads", "head_dim"), ("zeros",)),
+        "w_out": PSpec((h, dh, d), ("q_heads", "head_dim", "embed"),
+                       ("normal", 1.0 / np.sqrt(h * dh))),
+        "ln2": PSpec((d,), ("norm",), ("zeros",)),
+        "mlp": mlp_schema(d, _slstm_ff(cfg), "geglu"),
+    }
+
+
+def _slstm_cell(p_r, carry, xt):
+    """xt: [B,4,H,dh] pre-activations from W x_t. carry fp32."""
+    c, h, n, m = carry                              # [B,H,dh] x3, m [B,H,dh]
+    rec = jnp.einsum("ghij,bhj->bghi", p_r, h)      # [B,4,H,dh]
+    z_t, i_t, f_t, o_t = [ (xt + rec)[:, g] for g in range(4) ]
+    z = jnp.tanh(z_t)
+    o = jax.nn.sigmoid(o_t)
+    log_f = -jax.nn.softplus(-f_t)
+    m_new = jnp.maximum(log_f + m, i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    c = f_p * c + i_p * z
+    n = f_p * n + i_p
+    h_new = o * (c / jnp.maximum(n, 1.0))
+    return (c, h_new, n, m_new), h_new
+
+
+def _slstm_scan(p, x, cfg: ModelConfig, carry=None):
+    dtype = cfg.compute_dtype()
+    b = x.shape[0]
+    h_, dh = cfg.n_heads, cfg.head_dim
+    pre = ein("bsd,dghk->bsghk", x, p["wx"].astype(dtype),
+              dtype=jnp.float32) + p["b"]
+    if carry is None:
+        z = jnp.zeros((b, h_, dh), jnp.float32)
+        carry = (z, z, z, jnp.full((b, h_, dh), -1e30, jnp.float32))
+    xs = jnp.swapaxes(pre, 0, 1)                    # [S,B,4,H,dh]
+    carry, hs = jax.lax.scan(
+        lambda cr, xt: _slstm_cell(p["r"].astype(jnp.float32), cr, xt),
+        carry, xs)
+    return jnp.swapaxes(hs, 0, 1).astype(dtype), carry
+
+
+def _slstm_block(p, x, cfg: ModelConfig, carry=None):
+    dtype = cfg.compute_dtype()
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    mixed, carry = _slstm_scan(p, h, cfg, carry)
+    y = ein("bshk,hkd->bsd", mixed, p["w_out"].astype(dtype), dtype=dtype)
+    x = x + constrain(y, "batch", "seq_res", "act_embed")
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + mlp_apply(p["mlp"], h2, "geglu", dtype)
+    return x, carry
+
+
+def slstm_block_apply(p, x, cfg, **_):
+    y, _c = _slstm_block(p, x, cfg)
+    return y
+
+
+def slstm_block_prefill(p, x, cfg, *, cache, **_):
+    y, carry = _slstm_block(p, x, cfg)
+    c, h, n, m = carry
+    return y, {"c": c, "h": h, "n": n, "m": m}
+
+
+def slstm_block_decode(p, x, cfg, *, cache, **_):
+    carry = (cache["c"], cache["h"], cache["n"], cache["m"])
+    y, carry = _slstm_block(p, x, cfg, carry)
+    c, h, n, m = carry
+    return y, {"c": c, "h": h, "n": n, "m": m}
+
+
+def slstm_cache_schema(cfg: ModelConfig, batch: int) -> dict:
+    h, dh = cfg.n_heads, cfg.head_dim
+    vec = ("cache_batch", "q_heads", "head_dim")
+    return {
+        "c": PSpec((batch, h, dh), vec, ("zeros",)),
+        "h": PSpec((batch, h, dh), vec, ("zeros",)),
+        "n": PSpec((batch, h, dh), vec, ("zeros",)),
+        "m": PSpec((batch, h, dh), vec, ("const", -1e30)),
+    }

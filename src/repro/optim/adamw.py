@@ -1,0 +1,87 @@
+"""AdamW with configurable moment dtype + global-norm clipping.
+
+No optax dependency.  Moments may be stored in bf16 (``opt_state_dtype``) for
+the largest archs (llama3-405b on a single 256-chip pod is memory-bound on
+optimizer state; see DESIGN.md §6); math always runs in fp32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import DTYPES
+
+
+class AdamWState(NamedTuple):
+    m: dict
+    v: dict
+    count: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    state_dtype: str = "float32"
+
+    def init(self, params) -> AdamWState:
+        dt = DTYPES[self.state_dtype]
+        z = lambda p: jnp.zeros(p.shape, dt)
+        return AdamWState(m=jax.tree.map(z, params),
+                          v=jax.tree.map(z, params),
+                          count=jnp.zeros((), jnp.int32))
+
+    def update(self, grads, state: AdamWState, params, lr):
+        dt = DTYPES[self.state_dtype]
+        c = state.count + 1
+        bc1 = 1.0 - self.b1 ** c.astype(jnp.float32)
+        bc2 = 1.0 - self.b2 ** c.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            mf = self.b1 * m.astype(jnp.float32) + (1 - self.b1) * gf
+            vf = self.b2 * v.astype(jnp.float32) + (1 - self.b2) * gf * gf
+            step = lr * (mf / bc1) / (jnp.sqrt(vf / bc2) + self.eps)
+            if self.weight_decay and p.ndim >= 2:  # no decay on norms/biases
+                step = step + lr * self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - step).astype(p.dtype), \
+                mf.astype(dt), vf.astype(dt)
+
+        out = jax.tree.map(upd, grads, state.m, state.v, params)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, AdamWState(new_m, new_v, c)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(x.astype(jnp.float32) ** 2)
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale)
+                        .astype(x.dtype), tree), n
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = base_lr * (s + 1) / max(warmup, 1)
+        import numpy as np
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(np.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+    return lr

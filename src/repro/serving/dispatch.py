@@ -1,0 +1,146 @@
+"""Heterogeneous-replica dispatch — the paper's big/little cores, verbatim,
+at serving-fleet scale.
+
+A fleet mixes fast replicas (latest-gen pods: "big cores") and slow ones
+(older-gen / partially-degraded pods: "little cores"; e.g. a v5e pod next
+to a v4 pod, or a pod running with a failed host).  Every request needs one
+replica slot — the replica pool is the lock.
+
+* ``fair``   — round-robin over replicas (MCS analogue): slow-replica
+  service time lands on the critical path of 1/k of requests =>
+  fleet throughput collapse (Implication 1).
+* ``fast-only`` — never dispatch to slow replicas: queue blows up once the
+  fast replicas saturate (the paper's "only big cores" strawman; its
+  Bench-5 shows little cores help at lower contention).
+* ``asl``    — requests stand by for a fast replica during an AIMD reorder
+  window tuned against the request latency SLO; when the window expires
+  (fast replicas busy and the SLO is at risk) they take a slow replica.
+  Low load => everything runs fast; high load => slow replicas absorb
+  exactly as much spill as the SLO allows.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+import numpy as np
+
+from repro.core.aimd import AIMDWindow
+
+
+@dataclasses.dataclass
+class Replica:
+    speed: float          # service-time multiplier (1.0 = fast)
+    busy_until: float = 0.0
+
+
+def simulate_dispatch(policy: str, *, n_fast=4, n_slow=4, slow_factor=3.0,
+                      rate_rps=30.0, service_s=0.1, duration_s=300.0,
+                      slo=None, pct=99.0, seed=0,
+                      default_window=0.02, max_window=30.0):
+    """Event-driven M/G/k with heterogeneous servers; returns metrics.
+
+    ASL: a queued request may wait (stand by) for a fast replica until its
+    window expires, then accepts any replica.  Feedback: AIMD on completed
+    request latency vs SLO (one shared epoch class).
+    """
+    rng = np.random.default_rng(seed)
+    fast = [Replica(1.0) for _ in range(n_fast)]
+    slow = [Replica(slow_factor) for _ in range(n_slow)]
+    win = AIMDWindow(window=default_window,
+                     unit=default_window * (100 - pct) / 100, pct=pct,
+                     max_window=max_window)
+    t = 0.0
+    arrivals = []
+    while t < duration_s:
+        t += rng.exponential(1.0 / rate_rps)
+        arrivals.append((t, rng.lognormal(np.log(service_s), 0.3)))
+
+    lat = []
+    served_fast = served_slow = 0
+    queue = []          # (arrival_t, svc, deadline_for_fast)
+    events = []         # completion heap
+    clock = 0.0
+    ai = 0
+
+    def free_replica(pool, now):
+        for r in pool:
+            if r.busy_until <= now:
+                return r
+        return None
+
+    while ai < len(arrivals) or queue or events:
+        # next event time: arrival or completion; an ASL window deadline is
+        # only an event if a slow replica is free to accept the spill.
+        t_arr = arrivals[ai][0] if ai < len(arrivals) else np.inf
+        t_done = events[0] if events else np.inf
+        t_next = min(t_arr, t_done)
+        if policy == "asl" and queue and \
+                free_replica(slow, clock) is not None:
+            t_dead = min(d for _, _, d in queue)
+            t_next = min(t_next, max(t_dead, clock))
+        if t_next == np.inf:
+            break
+        clock = max(clock, t_next)
+        while events and events[0] <= clock:
+            heapq.heappop(events)
+        while ai < len(arrivals) and arrivals[ai][0] <= clock:
+            a, svc = arrivals[ai]
+            ai += 1
+            queue.append((a, svc, a + win.window))
+        # dispatch loop
+        progressed = True
+        while queue and progressed:
+            progressed = False
+            rf = free_replica(fast, clock)
+            rs = free_replica(slow, clock)
+            target = None
+            pick = 0
+            if policy == "fair":
+                # round-robin: earliest-free replica of either kind
+                cands = [r for r in fast + slow if r.busy_until <= clock]
+                if cands:
+                    target = cands[(served_fast + served_slow)
+                                   % len(cands)]
+            elif policy == "fast-only":
+                target = rf
+            else:  # asl
+                if rf is not None:
+                    target = rf    # fast replica: FIFO head takes it
+                elif rs is not None:
+                    # A standby whose window expired enqueues for the slow
+                    # pool — expiry order, not arrival order (paper §3.2).
+                    expired = [(d, i) for i, (_, _, d) in enumerate(queue)
+                               if clock >= d]
+                    if expired:
+                        pick = min(expired)[1]
+                        target = rs
+            if target is not None:
+                a, svc, dead = queue[pick]
+                queue.pop(pick)
+                dur = svc * target.speed
+                target.busy_until = clock + dur
+                heapq.heappush(events, clock + dur)
+                latency = clock + dur - a
+                lat.append(latency)
+                if slo is not None and policy == "asl":
+                    win.update(latency, slo)
+                if target.speed == 1.0:
+                    served_fast += 1
+                else:
+                    served_slow += 1
+                progressed = True
+
+    lat = np.array(lat[int(0.05 * len(lat)):] or [np.inf])
+    return {
+        "policy": policy,
+        "n": len(lat),
+        "throughput_rps": len(lat) / max(clock, 1e-9),
+        "p50": float(np.percentile(lat, 50)),
+        "p99": float(np.percentile(lat, 99)),
+        "served_fast": served_fast,
+        "served_slow": served_slow,
+        "final_window": win.window,
+        "slo_violation": float(np.mean(lat > slo)) if slo else None,
+    }

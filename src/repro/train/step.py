@@ -1,0 +1,92 @@
+"""Train / serve step builders (remat + gradient-accumulation scan).
+
+``make_train_step`` returns a pure function
+``(params, opt_state, step, batch) -> (params, opt_state, step, metrics)``
+suitable for ``jax.jit`` with donated state.  Microbatching runs as a
+``lax.scan`` over the leading batch split, accumulating grads in
+``cfg.grad_accum_dtype`` (fp32 default; bf16 for the 405B memory budget).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import DTYPES, ModelConfig, ShapeSpec
+from repro.optim.adamw import AdamW, clip_by_global_norm
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamW, lr_fn, *,
+                    microbatches: int = 1, clip_norm: float = 1.0,
+                    unroll_accum: bool = False):
+    """``unroll_accum`` unrolls the microbatch loop in the HLO — used by the
+    roofline analysis, where scan bodies are cost-counted only once."""
+    acc_dt = DTYPES[getattr(cfg, "grad_accum_dtype", "float32")]
+
+    def loss_fn(params, mb):
+        return lm.loss_fn(params, cfg, mb)
+
+    def train_step(params, opt_state, step, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        elif unroll_accum:
+            mbs = jax.tree.map(
+                lambda x: x.reshape((microbatches,
+                                     x.shape[0] // microbatches)
+                                    + x.shape[1:]), batch)
+            grads = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt),
+                                 params)
+            loss = jnp.zeros((), jnp.float32)
+            for i in range(microbatches):
+                mb = jax.tree.map(lambda x: x[i], mbs)
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                grads = jax.tree.map(lambda a, b: a + b.astype(acc_dt),
+                                     grads, g)
+                loss = loss + l
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            metrics = {"loss": loss}
+        else:
+            mbs = jax.tree.map(
+                lambda x: x.reshape((microbatches,
+                                     x.shape[0] // microbatches)
+                                    + x.shape[1:]), batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+
+            def acc(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(acc_dt), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            (grads, loss), _ = jax.lax.scan(
+                acc, (g0, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            metrics = {"loss": loss}
+
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        params, opt_state = opt.update(grads, opt_state, params, lr_fn(step))
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr_fn(step))
+        return params, opt_state, step + 1, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch, cache):
+        return lm.prefill(params, cfg, batch, cache)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, tokens, lengths, cache):
+        return lm.decode_step(params, cfg, tokens, lengths, cache)
+    return decode_step

@@ -1,0 +1,248 @@
+"""Correctness tests for the threaded lock implementations (Algorithms 1-3).
+
+Wall-clock scaling is not measurable on one core; these tests prove the
+structural contracts: mutual exclusion, FIFO handoff order, bounded
+reordering (window expiry forces enqueue), proportional batching ratio,
+AIMD window algebra, epoch nesting.
+"""
+
+import threading
+import time
+
+import pytest
+
+from repro.core import (AIMDWindow, ASLMutex, FIFOLock, LibASL,
+                        ProportionalLock, ReorderableLock, TASLock,
+                        TicketLock)
+from repro.core.aimd import aimd_update
+
+
+def _hammer(lock, n_threads=8, n_iter=200):
+    """Shared counter increments; returns (final, expected, interleave_ok)."""
+    state = {"x": 0}
+
+    def worker():
+        for _ in range(n_iter):
+            lock.acquire()
+            v = state["x"]
+            time.sleep(0)  # force interleaving opportunity
+            state["x"] = v + 1
+            lock.release()
+
+    ts = [threading.Thread(target=worker) for _ in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    return state["x"], n_threads * n_iter
+
+
+@pytest.mark.parametrize("mk", [FIFOLock, TASLock, TicketLock,
+                                lambda: ProportionalLock(lambda: True),
+                                lambda: ReorderableLockAdapter()])
+def test_mutual_exclusion(mk):
+    lock = mk()
+    got, want = _hammer(lock)
+    assert got == want
+
+
+class ReorderableLockAdapter:
+    """Exercise lock_reorder/lock_immediately mixed under contention."""
+
+    def __init__(self):
+        self._rl = ReorderableLock()
+        self._i = 0
+
+    def acquire(self):
+        self._i += 1
+        if self._i % 2:
+            self._rl.lock_immediately()
+        else:
+            self._rl.lock_reorder(50_000)  # 50us window
+
+    def release(self):
+        self._rl.unlock()
+
+
+def test_fifo_handoff_order():
+    lock = FIFOLock()
+    order = []
+    lock.lock_fifo()  # hold so the workers queue up
+    started = threading.Barrier(5)
+    ready = []
+
+    def worker(i):
+        started.wait()
+        # serialize queue entry by index
+        while len(ready) != i:
+            time.sleep(1e-4)
+        ready.append(i)
+        lock.lock_fifo()
+        order.append(i)
+        lock.unlock_fifo()
+
+    ts = [threading.Thread(target=worker, args=(i,)) for i in range(4)]
+    for t in ts:
+        t.start()
+    started.wait()
+    while len(ready) < 4:
+        time.sleep(1e-3)
+    time.sleep(0.02)  # let the last worker enqueue
+    lock.unlock_fifo()
+    for t in ts:
+        t.join()
+    assert order == [0, 1, 2, 3]
+
+
+def test_reorder_window_bounds_bypass():
+    """A standby competitor enqueues after its window; once queued it cannot
+    be bypassed (bounded reordering => starvation freedom)."""
+    rl = ReorderableLock()
+    rl.lock_immediately()          # hold
+    acquired = []
+
+    def standby():
+        rl.lock_reorder(window_ns=20_000_000)  # 20 ms
+        acquired.append("standby")
+        rl.unlock()
+
+    t = threading.Thread(target=standby)
+    t.start()
+    time.sleep(0.05)               # > window: standby must be enqueued now
+    # A late immediate competitor must NOT overtake the expired standby.
+    def big():
+        rl.lock_immediately()
+        acquired.append("big")
+        rl.unlock()
+
+    t2 = threading.Thread(target=big)
+    t2.start()
+    time.sleep(0.01)
+    rl.unlock()
+    t.join(); t2.join()
+    assert acquired[0] == "standby"
+
+
+def test_reorder_fast_path_free_lock():
+    rl = ReorderableLock()
+    t0 = time.monotonic()
+    rl.lock_reorder(window_ns=int(1e9))  # free lock: no wait
+    assert time.monotonic() - t0 < 0.2
+    rl.unlock()
+
+
+def test_proportional_ratio():
+    """1 little grant after every N big grants (paper Figure 5 policy)."""
+    role = threading.local()
+    lock = ProportionalLock(lambda: getattr(role, "big", False),
+                            proportion=3)
+    grants = []
+    lock.acquire()  # hold while everyone queues
+
+    def worker(big, tag):
+        role.big = big
+        lock.acquire()
+        grants.append(tag)
+        time.sleep(0.001)
+        lock.release()
+
+    ts = []
+    for i in range(6):
+        ts.append(threading.Thread(target=worker, args=(True, f"B{i}")))
+    for i in range(2):
+        ts.append(threading.Thread(target=worker, args=(False, f"L{i}")))
+    for t in ts:
+        t.start()
+    time.sleep(0.05)
+    role.big = True
+    lock.release()
+    for t in ts:
+        t.join()
+    # First little-core grant must come after exactly 3 bigs
+    first_l = next(i for i, g in enumerate(grants) if g.startswith("L"))
+    assert first_l == 3, grants
+
+
+# ---------------------------------------------------------------------------
+# AIMD (Algorithm 2)
+# ---------------------------------------------------------------------------
+
+def test_aimd_violation_halves_and_unit_rescaled():
+    w = AIMDWindow(window=1000.0, unit=10.0, pct=99.0)
+    w.update(latency=500.0, slo=100.0)  # violated
+    # halve -> 500, unit = 500*0.01 = 5, then +unit
+    assert w.window == pytest.approx(505.0)
+    assert w.unit == pytest.approx(5.0)
+
+
+def test_aimd_linear_growth():
+    w = AIMDWindow(window=100.0, unit=7.0, pct=99.0)
+    for _ in range(5):
+        w.update(latency=1.0, slo=100.0)
+    assert w.window == pytest.approx(100.0 + 5 * 7.0)
+
+
+def test_aimd_cap():
+    w = AIMDWindow(window=100.0, unit=1e12, max_window=500.0)
+    w.update(1.0, 100.0)
+    assert w.window == 500.0
+
+
+def test_aimd_jnp_matches_host():
+    import numpy as np
+    w, u = 1000.0, 10.0
+    host = AIMDWindow(window=w, unit=u, pct=99.0, max_window=1e9)
+    for lat, slo in [(50, 100), (150, 100), (99, 100), (1e4, 100), (1, 100)]:
+        host.update(lat, slo)
+        w, u = aimd_update(w, u, float(lat), float(slo), pct=99.0,
+                           max_window=1e9)
+    assert np.asarray(w) == pytest.approx(host.window, rel=1e-6)
+    assert np.asarray(u) == pytest.approx(host.unit, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# LibASL epoch API (Algorithm 3)
+# ---------------------------------------------------------------------------
+
+def test_epoch_nesting_and_window_selection():
+    clock = {"t": 0}
+    rt = LibASL(is_big_core=lambda: False, clock_ns=lambda: clock["t"])
+    rt.epoch_start(1)
+    rt.epoch_start(2)           # nested: inner epoch governs
+    w2 = rt.current_window_ns()
+    clock["t"] += 10_000
+    rt.epoch_end(2, slo_ns=5_000)   # violated: inner window halves
+    assert rt._tls.cur_epoch_id == 1
+    rt.epoch_start(2)
+    assert rt.current_window_ns() < w2
+    clock["t"] += 1
+    rt.epoch_end(2, slo_ns=5_000)
+    clock["t"] += 1
+    rt.epoch_end(1, slo_ns=100_000)
+    assert rt._tls.cur_epoch_id == -1
+
+
+def test_big_core_skips_adjustment():
+    clock = {"t": 0}
+    rt = LibASL(is_big_core=lambda: True, clock_ns=lambda: clock["t"])
+    rt.epoch_start(7)
+    w0 = rt._tls.epochs[7].window
+    clock["t"] += 10 ** 9
+    rt.epoch_end(7, slo_ns=1)   # hugely violated but big core: no change
+    assert rt._tls.epochs[7].window == w0
+
+
+def test_asl_mutex_dispatch():
+    role = threading.local()
+    rt = LibASL(is_big_core=lambda: getattr(role, "big", True))
+    m = rt.mutex()
+    role.big = True
+    with m:
+        pass
+    role.big = False
+    rt.epoch_start(1)
+    with m:
+        pass
+    rt.epoch_end(1, slo_ns=10 ** 9)
+    got, want = _hammer(m, n_threads=4, n_iter=100)
+    assert got == want

@@ -1,0 +1,128 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mlstm_scan import mlstm_scan
+from repro.kernels.rglru_scan import rglru_scan
+
+TOL = {jnp.float32: 3e-5, jnp.bfloat16: 2e-2}
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,h,kh,s,t,dh,causal,window",
+    [
+        (2, 4, 4, 128, 128, 64, True, 0),      # MHA causal
+        (1, 8, 2, 256, 256, 64, True, 0),      # GQA 4:1
+        (2, 4, 1, 128, 128, 128, True, 0),     # MQA
+        (1, 4, 2, 128, 256, 64, False, 0),     # cross/bidir, longer K
+        (1, 4, 2, 256, 256, 64, True, 64),     # local window
+        (1, 2, 2, 512, 512, 32, True, 128),    # long + window
+    ])
+def test_flash_attention_sweep(b, h, kh, s, t, dh, causal, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(ks[0], (b, h, s, dh), dtype)
+    k = _rand(ks[1], (b, kh, t, dh), dtype)
+    v = _rand(ks[2], (b, kh, t, dh), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=64, block_k=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,kh,t,dh", [
+    (2, 8, 2, 256, 64),
+    (3, 4, 4, 512, 128),
+    (1, 16, 2, 1024, 64),
+])
+def test_decode_attention_sweep(b, h, kh, t, dh, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = _rand(ks[0], (b, h, dh), dtype)
+    kc = _rand(ks[1], (b, kh, t, dh), dtype)
+    vc = _rand(ks[2], (b, kh, t, dh), dtype)
+    lengths = jnp.asarray([(t // 3 + i * 17) % t + 1 for i in range(b)],
+                          jnp.int32)
+    out = decode_attention(q, kc, vc, lengths, block_k=128, interpret=True)
+    want = ref.decode_attention_ref(q, kc, vc, lengths)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,r,h0", [
+    (2, 128, 64, False),
+    (1, 512, 256, True),
+    (4, 64, 128, True),
+])
+def test_rglru_scan_sweep(b, s, r, h0, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    a = jax.nn.sigmoid(_rand(ks[0], (b, s, r), jnp.float32)).astype(dtype)
+    x = _rand(ks[1], (b, s, r), dtype)
+    h = _rand(ks[2], (b, r), jnp.float32) if h0 else None
+    out = rglru_scan(a, x, h, block_s=32, block_c=32, interpret=True)
+    want = ref.rglru_scan_ref(a, x, h)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=5 * TOL[dtype], rtol=5 * TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,s,dh,with_carry", [
+    (2, 2, 64, 32, False),
+    (1, 4, 128, 64, True),
+])
+def test_mlstm_scan_sweep(b, h, s, dh, with_carry, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 8)
+    q = _rand(ks[0], (b, h, s, dh), dtype)
+    k = (_rand(ks[1], (b, h, s, dh), jnp.float32)
+         / np.sqrt(dh)).astype(dtype)
+    v = _rand(ks[2], (b, h, s, dh), dtype)
+    ig = _rand(ks[3], (b, h, s), jnp.float32)
+    fg = _rand(ks[4], (b, h, s), jnp.float32) + 2.0
+    carry = None
+    if with_carry:
+        carry = (jnp.abs(_rand(ks[5], (b, h, dh, dh), jnp.float32)) * 0.1,
+                 jnp.abs(_rand(ks[6], (b, h, dh), jnp.float32)) * 0.1,
+                 jnp.zeros((b, h), jnp.float32))
+    out, (C, n, m) = mlstm_scan(q, k, v, ig, fg, carry, block_s=32,
+                                interpret=True)
+    want, (Cw, nw, mw) = ref.mlstm_scan_ref(q, k, v, ig, fg, carry)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=10 * TOL[dtype], rtol=10 * TOL[dtype])
+    np.testing.assert_allclose(np.asarray(C), np.asarray(Cw), atol=1e-4,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(mw), atol=1e-5,
+                               rtol=1e-5)
+
+
+def test_model_attention_matches_kernel():
+    """The model's XLA attention path == kernel semantics (same oracle)."""
+    from repro.models.layers import attention
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    b, h, kh, s, dh = 2, 8, 2, 256, 64
+    q = _rand(ks[0], (b, s, h, dh), jnp.float32)
+    k = _rand(ks[1], (b, s, kh, dh), jnp.float32)
+    v = _rand(ks[2], (b, s, kh, dh), jnp.float32)
+    model_out = attention(q, k, v, causal=True, q_block=64,
+                          dtype=jnp.float32)
+    kern = flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                           v.transpose(0, 2, 1, 3), causal=True,
+                           block_q=64, block_k=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(model_out),
+                               np.asarray(kern.transpose(0, 2, 1, 3)),
+                               atol=3e-5, rtol=3e-5)

@@ -1,0 +1,178 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aimd import AIMDWindow, aimd_update
+from repro.core.asl_schedule import ASLScheduler
+from repro.models.layers import attention
+from repro.optim.compression import dequantize_int8, quantize_int8
+
+SET = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# AIMD (Algorithm 2) invariants
+# ---------------------------------------------------------------------------
+
+@given(w0=st.floats(1.0, 1e6), lat=st.floats(0.0, 1e9),
+       slo=st.floats(1.0, 1e6), pct=st.floats(50.0, 99.9))
+@settings(**SET)
+def test_aimd_window_bounds(w0, lat, slo, pct):
+    w = AIMDWindow(window=w0, unit=w0 * (100 - pct) / 100, pct=pct,
+                   max_window=1e7)
+    w.update(lat, slo)
+    assert 0.0 <= w.window <= 1e7
+    # violation shrinks (halve then one linear step keeps it under w0)
+    if lat > slo and w0 > 1e-6:
+        assert w.window <= w0
+
+
+@given(w0=st.floats(1.0, 1e4), slo=st.floats(10.0, 1e5),
+       n=st.integers(1, 50))
+@settings(**SET)
+def test_aimd_monotone_growth_under_slo(w0, slo, n):
+    w = AIMDWindow(window=w0, unit=5.0, pct=99.0, max_window=1e9)
+    prev = w.window
+    for _ in range(n):
+        w.update(latency=slo * 0.5, slo=slo)   # never violated
+        assert w.window >= prev                # linear growth only
+        prev = w.window
+
+
+@given(w=st.floats(1.0, 1e6), u=st.floats(0.0, 1e3),
+       lat=st.floats(0.0, 1e7), slo=st.floats(1.0, 1e6))
+@settings(**SET)
+def test_aimd_jnp_equals_host(w, u, lat, slo):
+    host = AIMDWindow(window=w, unit=u, pct=99.0, max_window=1e8)
+    host.update(lat, slo)
+    wj, uj = aimd_update(jnp.float32(w), jnp.float32(u), jnp.float32(lat),
+                         jnp.float32(slo), pct=99.0, max_window=1e8)
+    np.testing.assert_allclose(float(wj), host.window, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ASL scheduler: no loss, no duplication, bounded bypass
+# ---------------------------------------------------------------------------
+
+@given(ops=st.lists(st.tuples(st.sampled_from(["big", "little", "pop",
+                                               "tick"]),
+                              st.floats(0.0, 5.0)), min_size=1,
+                    max_size=60))
+@settings(**SET)
+def test_scheduler_conservation(ops):
+    clk = {"t": 0.0}
+    sched = ASLScheduler(lambda: clk["t"], default_window=2.0,
+                         max_window=50.0)
+    submitted, popped = [], []
+    i = 0
+    for kind, dt in ops:
+        if kind == "tick":
+            clk["t"] += dt
+        elif kind == "pop":
+            it = sched.next_item()
+            if it is not None:
+                popped.append(it.payload)
+        else:
+            sched.submit(i, kind)
+            submitted.append(i)
+            i += 1
+    while (it := sched.next_item()) is not None:
+        popped.append(it.payload)
+    assert sorted(popped) == sorted(submitted)      # exactly once
+    assert sched.pending() == 0
+
+
+@given(n_big=st.integers(0, 10), n_little=st.integers(0, 10))
+@settings(**SET)
+def test_scheduler_big_fifo_order(n_big, n_little):
+    sched = ASLScheduler(lambda: 0.0, default_window=100.0)
+    for i in range(n_little):
+        sched.submit(("l", i), "little")
+    for i in range(n_big):
+        sched.submit(("b", i), "big")
+    bigs = []
+    for _ in range(n_big):
+        it = sched.next_item()
+        assert it.klass == "big"        # standbys wait out their window
+        bigs.append(it.payload[1])
+    assert bigs == sorted(bigs)         # FIFO among big
+
+
+# ---------------------------------------------------------------------------
+# Gradient quantization error bound
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 2 ** 16), scale=st.floats(1e-3, 1e3),
+       n=st.integers(1, 2000))
+@settings(**SET)
+def test_quantize_error_bound(seed, scale, n):
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (n,))) * scale
+    q, s, meta = quantize_int8(jnp.asarray(x), block=256)
+    back = np.asarray(dequantize_int8(q, s, meta))
+    # per-block bound: half a quantization step of the block max
+    blocks = np.pad(np.abs(x), (0, (-n) % 256)).reshape(-1, 256)
+    bound = np.repeat(blocks.max(1) / 127.0, 256)[:n] * 0.51 + 1e-9
+    assert (np.abs(back - x) <= bound).all()
+
+
+# ---------------------------------------------------------------------------
+# Attention causality: future tokens cannot influence past outputs
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 1000), cut=st.integers(1, 15))
+@settings(max_examples=10, deadline=None)
+def test_attention_causal_independence(seed, cut):
+    b, s, h, kh, dh = 1, 16, 4, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (b, s, h, dh))
+    k = jax.random.normal(ks[1], (b, s, kh, dh))
+    v = jax.random.normal(ks[2], (b, s, kh, dh))
+    out1 = attention(q, k, v, causal=True, q_block=8, dtype=jnp.float32)
+    # perturb k/v strictly after `cut`
+    noise = jax.random.normal(ks[3], (b, s - cut, kh, dh)) * 10
+    k2 = k.at[:, cut:].add(noise)
+    v2 = v.at[:, cut:].add(noise)
+    out2 = attention(q, k2, v2, causal=True, q_block=8, dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out1[:, :cut]),
+                               np.asarray(out2[:, :cut]), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline: host shards tile the global batch for any divisor
+# ---------------------------------------------------------------------------
+
+@given(hosts=st.sampled_from([1, 2, 4, 8]), step=st.integers(0, 1000),
+       seed=st.integers(0, 100))
+@settings(**SET)
+def test_data_host_partition_property(hosts, step, seed):
+    from repro.data.pipeline import DataConfig, TokenDataset
+    full = TokenDataset(DataConfig(vocab=97, seq_len=8, global_batch=8,
+                                   seed=seed))
+    parts = [TokenDataset(DataConfig(vocab=97, seq_len=8, global_batch=8,
+                                     host_index=i, host_count=hosts,
+                                     seed=seed)).batch(step)["tokens"]
+             for i in range(hosts)]
+    np.testing.assert_array_equal(np.concatenate(parts),
+                                  full.batch(step)["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# CE loss equals the naive reference
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 1000), v=st.integers(3, 50))
+@settings(max_examples=15, deadline=None)
+def test_cross_entropy_matches_naive(seed, v):
+    from repro.models.lm import cross_entropy
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    logits = jax.random.normal(ks[0], (2, 5, v)) * 5
+    labels = jax.random.randint(ks[1], (2, 5), 0, v)
+    got = float(cross_entropy(logits, labels))
+    lp = jax.nn.log_softmax(np.asarray(logits, np.float64), axis=-1)
+    want = -np.mean(np.take_along_axis(
+        np.asarray(lp), np.asarray(labels)[..., None], axis=-1))
+    assert got == pytest.approx(want, rel=1e-4)

@@ -1,0 +1,126 @@
+"""Behavioral tests of the JAX discrete-event AMP simulator against the
+paper's qualitative claims (the quantitative figures live in benchmarks/)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import simlock as sl
+
+
+def _run(policy, slo=1e9, **kw):
+    cfg = sl.SimConfig(policy=policy, sim_time_us=30_000.0, **kw)
+    st = sl.run(cfg, slo)
+    return cfg, sl.summarize(cfg, st)
+
+
+def test_fifo_equal_cs_counts():
+    """FIFO gives every core an equal chance to lock (Implication 1)."""
+    _, s = _run("fifo")
+    cs = np.array(s["cs_per_core"], float)
+    assert cs.min() > 0
+    assert cs.max() / cs.min() < 1.35   # near-equal grants
+
+
+def test_fifo_throughput_collapse_vs_big_only():
+    """MCS throughput collapses when little cores join (paper Figure 1)."""
+    _, s8 = _run("fifo", seg_noncrit_us=(1.0,), seg_cs_us=(3.0,),
+                 inter_epoch_us=5.0)
+    cfg4 = sl.SimConfig(policy="fifo", n_cores=4, big=(1,) * 4,
+                        speed_cs=(1.0,) * 4, speed_nc=(1.0,) * 4,
+                        sim_time_us=30_000.0)
+    s4 = sl.summarize(cfg4, sl.run(cfg4, 1e9))
+    assert s8["throughput_cs_per_s"] < 0.6 * s4["throughput_cs_per_s"]
+
+
+def test_tas_little_affinity_collapses_big_latency():
+    """Little-core-affinity TAS: big cores starve (paper Figure 1/3b)."""
+    _, s = _run("tas", w_big=0.15)
+    assert s["cs_p99_big_us"] > 2.5 * s["cs_p99_little_us"]
+    cs = np.array(s["cs_per_core"], float)
+    assert cs[4:].sum() > 1.5 * cs[:4].sum()   # most CS on little cores
+
+
+def test_tas_big_affinity_faster_but_unfair():
+    """Big-core-affinity TAS: higher throughput than FIFO, latency collapse
+    on little cores (paper Figure 4)."""
+    _, sf = _run("fifo")
+    _, st = _run("tas", w_big=8.0)
+    assert st["throughput_cs_per_s"] > 1.1 * sf["throughput_cs_per_s"]
+    assert st["cs_p99_little_us"] > 2.0 * sf["cs_p99_little_us"]
+
+
+def test_proportional_tradeoff_monotonic():
+    """Larger proportion => more throughput and longer little-core latency
+    (paper Figure 5)."""
+    tput, lat = [], []
+    for n in (1, 5, 20):
+        _, s = _run("prop", prop_n=n)
+        tput.append(s["throughput_cs_per_s"])
+        lat.append(s["ep_p99_little_us"])
+    assert tput[0] < tput[1] < tput[2]
+    assert lat[0] < lat[1] < lat[2]
+
+
+def test_libasl_fallback_to_fifo_at_zero_slo():
+    """SLO=0 is unachievable -> LibASL == FIFO (paper LibASL-0)."""
+    _, sf = _run("fifo")
+    _, s0 = _run("libasl", slo=0.0)
+    assert s0["throughput_cs_per_s"] == pytest.approx(
+        sf["throughput_cs_per_s"], rel=0.05)
+    w = np.array(s0["final_window_us"][4:])
+    assert (w < 1.0).all()          # windows collapsed
+
+
+def test_libasl_tracks_slo():
+    """Little-core P99 epoch latency sticks just under the SLO while
+    throughput exceeds FIFO (paper Figure 8b)."""
+    _, sf = _run("fifo")
+    for slo in (60.0, 90.0):
+        _, s = _run("libasl", slo=slo)
+        assert s["ep_p99_little_us"] <= slo * 1.15
+        assert s["ep_p99_little_us"] >= slo * 0.5
+        assert s["throughput_cs_per_s"] > sf["throughput_cs_per_s"]
+
+
+def test_libasl_throughput_monotonic_in_slo():
+    ts = []
+    for slo in (40.0, 80.0, 160.0):
+        _, s = _run("libasl", slo=slo)
+        ts.append(s["throughput_cs_per_s"])
+    assert ts[0] <= ts[1] * 1.02 and ts[1] <= ts[2] * 1.02
+    assert ts[2] > ts[0]
+
+
+def test_determinism():
+    cfg = sl.SimConfig(policy="libasl", sim_time_us=10_000.0)
+    a = sl.run(cfg, 50.0, seed=7)
+    b = sl.run(cfg, 50.0, seed=7)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_sweep_vmap_matches_single():
+    cfg = sl.SimConfig(policy="libasl", sim_time_us=10_000.0)
+    sweep = sl.sweep_slo(cfg, [30.0, 70.0])
+    single = sl.run(cfg, jax.numpy.float32(70.0))
+    sv = sl.summarize(cfg, jax.tree.map(lambda x: x[1], sweep))
+    ss = sl.summarize(cfg, single)
+    assert sv["throughput_cs_per_s"] == pytest.approx(
+        ss["throughput_cs_per_s"], rel=1e-6)
+
+
+def test_two_locks_program():
+    """Bench-1 shape: 4 CS of different lengths over 2 locks per epoch."""
+    cfg = sl.SimConfig(policy="libasl", n_locks=2,
+                       seg_noncrit_us=(1.0, 0.5, 0.5, 0.5),
+                       seg_cs_us=(2.0, 1.0, 3.0, 0.5),
+                       seg_lock=(0, 1, 0, 1),
+                       sim_time_us=20_000.0)
+    st = sl.run(cfg, 200.0)
+    s = sl.summarize(cfg, st)
+    assert s["throughput_cs_per_s"] > 0
+    assert np.isfinite(s["ep_p99_little_us"])
+    # conservation: every epoch contains 4 critical sections
+    assert sum(s["cs_per_core"]) == pytest.approx(
+        4 * sum(s["epochs_per_core"]), abs=4 * cfg.n_cores)

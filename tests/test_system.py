@@ -1,0 +1,113 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The paper's contract, exercised through the full stack: SLO-guided bounded
+reordering keeps tail latency at the SLO while taking whatever throughput
+the SLO allows — at the lock (simulator), the serving engine, and the
+heterogeneous fleet; plus the train -> checkpoint -> serve lifecycle.
+"""
+
+import json
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import lm
+from repro.serving.dispatch import simulate_dispatch
+from repro.serving.engine import CostModel, ServingEngine, poisson_workload
+from repro.train.trainer import Trainer, TrainerConfig
+
+ART = Path(__file__).resolve().parents[1] / "artifacts"
+
+
+def test_serving_engine_policies_end_to_end():
+    """greedy starves prefill (TAS analogue); ASL admits bounded work."""
+    cost = CostModel(decode_step_s=2e-3, prefill_chunk_s=18e-3,
+                     prefill_chunk=2048, max_batch=64)
+    out = {}
+    for sched in ("fifo", "greedy", "asl"):
+        kw = {"default_window": 0.02, "max_window": 10.0} \
+            if sched == "asl" else {}
+        eng = ServingEngine(sched, cost, scheduler_kwargs=kw, seed=1)
+        poisson_workload(eng, rate_rps=2.5, duration_s=90.0,
+                         prompt_lens=[2048, 8192], new_tokens=[64, 256],
+                         slo_ttft=0.6, seed=2)
+        out[sched] = eng.metrics()
+    # greedy: prefill starvation => far fewer completions / huge TTFT
+    assert out["greedy"]["ttft_p99"] > 3 * out["asl"]["ttft_p99"]
+    # ASL completes what FIFO completes (bounded reordering loses nothing)
+    assert out["asl"]["n"] >= 0.9 * out["fifo"]["n"]
+    # and keeps the TTFT tail in the same class as FIFO (vs greedy collapse)
+    assert out["asl"]["ttft_p99"] < 2.0 * out["fifo"]["ttft_p99"]
+
+
+def test_dispatch_three_regimes():
+    lo = {p: simulate_dispatch(p, rate_rps=15.0, service_s=0.1, slo=0.5,
+                               duration_s=120.0, seed=3)
+          for p in ("fair", "fast-only", "asl")}
+    hi = {p: simulate_dispatch(p, rate_rps=45.0, service_s=0.1, slo=0.5,
+                               duration_s=120.0, seed=3)
+          for p in ("fair", "fast-only", "asl")}
+    # low load: fair puts work on slow replicas => inflated tail
+    assert lo["fair"]["p99"] > 1.5 * lo["asl"]["p99"]
+    # high load: fast-only saturates; ASL absorbs the spill
+    assert hi["asl"]["throughput_rps"] > 1.1 * hi["fast-only"]["throughput_rps"]
+    # ASL uses slow replicas only under pressure
+    assert lo["asl"]["served_slow"] < 0.05 * lo["asl"]["n"]
+    assert hi["asl"]["served_slow"] > 0.1 * hi["asl"]["n"]
+
+
+def test_train_checkpoint_serve_lifecycle(tmp_path):
+    cfg = registry.get_tiny("llama3_405b")
+    t = Trainer(cfg, TrainerConfig(total_steps=10, ckpt_every=5,
+                                   ckpt_dir=str(tmp_path), global_batch=4,
+                                   seq_len=32, lr=1e-3))
+    out = t.run()
+    assert out["step"] == 10
+    # restore into a fresh process-equivalent and serve
+    t2 = Trainer(cfg, TrainerConfig(total_steps=10, ckpt_every=5,
+                                    ckpt_dir=str(tmp_path), global_batch=4,
+                                    seq_len=32))
+    params, _, step = t2.init_or_restore()
+    assert step == 10
+    cache = lm.init_cache(cfg, 2, 64)
+    prompt = jnp.ones((2, 16), jnp.int32)
+    logits, cache = lm.prefill(params, cfg, {"tokens": prompt}, cache)
+    lengths = jnp.full((2,), 16, jnp.int32)
+    toks = []
+    for _ in range(8):
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        toks.append(np.asarray(nxt))
+        logits, cache, lengths = lm.decode_step(
+            params, cfg, nxt[:, None], lengths, cache)
+        assert np.isfinite(np.asarray(logits)).all()
+    assert len(toks) == 8
+
+
+@pytest.mark.skipif(not (ART / "dryrun").exists(),
+                    reason="dry-run artifacts not generated")
+def test_dryrun_artifacts_all_ok():
+    """Every recorded (arch x shape x mesh) cell compiled (or was a
+    documented skip) — the multi-pod runnability contract."""
+    cells = [json.loads(f.read_text())
+             for f in (ART / "dryrun").glob("*.json")]
+    assert len(cells) >= 80
+    bad = [c["cell"] for c in cells if not c.get("ok")]
+    assert not bad, bad
+    pods = {c["mesh"] for c in cells if not c.get("skipped")}
+    assert pods == {"16x16", "2x16x16"}
+
+
+@pytest.mark.skipif(not (ART / "roofline").exists(),
+                    reason="roofline artifacts not generated")
+def test_roofline_decode_cells_memory_bound():
+    """After §Perf, decode serving steps sit at the memory roofline."""
+    for f in (ART / "roofline").glob("*decode_32k.json"):
+        d = json.loads(f.read_text())
+        if d.get("skipped") or not d.get("ok"):
+            continue
+        if d["arch"] in ("recurrentgemma-2b", "xlstm-125m"):
+            continue  # sub-ms states: collective floor dominates trivially
+        assert d["dominant"] == "memory", (d["cell"], d["dominant"])
