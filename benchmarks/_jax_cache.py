@@ -1,0 +1,23 @@
+"""Shared JAX persistent-compilation-cache setup for the bench drivers."""
+
+from __future__ import annotations
+
+from pathlib import Path
+
+
+def enable_persistent_cache(cache_dir: Path) -> None:
+    """Point the live XLA compile cache at ``cache_dir`` (best-effort:
+    the cache is an optimization, never a requirement)."""
+    import jax
+    try:
+        cache_dir.mkdir(parents=True, exist_ok=True)
+        jax.config.update("jax_compilation_cache_dir", str(cache_dir))
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+        # The backend may already be initialized (module-level jnp consts
+        # in repro.core.simlock) — re-point the live cache at the dir.
+        from jax.experimental.compilation_cache import (
+            compilation_cache as cc)
+        cc.reset_cache()
+    except Exception as e:
+        print(f"# persistent compile cache unavailable: {e}")

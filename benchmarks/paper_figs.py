@@ -6,11 +6,17 @@ cores (the Sysbench gap), non-critical NOP work 1.8x slower (the NOP gap);
 CS = 3us on a big core (contended 4-cache-line RMW), intra-epoch noncrit
 1us, inter-epoch 5us — chosen so 4 big cores already saturate the lock,
 the regime of paper Figures 1/4.  All numbers are simulated microseconds.
+
+Every figure is expressed on the batched sweep engine
+(``simlock.sweep``): one vmapped+jitted call per (policy, program), with
+thread counts, SLOs, policy weights, mix ratios and wakeup costs riding as
+traced batch axes — fig1's 24 cells compile exactly 3 executables (one per
+policy).  ``SIM_SCALE`` shortens every simulation for CI smoke runs
+(``benchmarks/run.py --quick``).
 """
 
 from __future__ import annotations
 
-import jax
 import numpy as np
 
 from repro.core import simlock as sl
@@ -19,8 +25,12 @@ BIG_SPEED = 1.0
 CS_RATIO = 3.75
 NC_RATIO = 1.8
 
+# Global sim-length scale: benchmarks/run.py --quick sets this < 1 so a
+# smoke run of every figure fits in CI time.
+SIM_SCALE = 1.0
 
-def _cfg(policy, n_cores=8, **kw):
+
+def _cfg(policy, n_cores=8, sim_time_us=60_000.0, **kw):
     n_big = min(n_cores, 4)
     big = tuple([1] * n_big + [0] * (n_cores - n_big))
     base = dict(
@@ -28,14 +38,12 @@ def _cfg(policy, n_cores=8, **kw):
         speed_cs=tuple(1.0 if b else CS_RATIO for b in big),
         speed_nc=tuple(1.0 if b else NC_RATIO for b in big),
         seg_noncrit_us=(1.0,), seg_cs_us=(3.0,), seg_lock=(0,),
-        inter_epoch_us=5.0, sim_time_us=60_000.0)
+        inter_epoch_us=5.0, sim_time_us=sim_time_us * SIM_SCALE)
     base.update(kw)
     return sl.SimConfig(**base)
 
 
-def _row(name, cfg, slo=1e9, seed=0, windows0=None):
-    st = sl.run(cfg, slo, seed, windows0)
-    s = sl.summarize(cfg, st)
+def _rowdict(name, cfg, s):
     return dict(name=name, policy=cfg.policy,
                 tput=s["throughput_cs_per_s"],
                 p99_all=s["cs_p99_all_us"], ep_p99_all=s["ep_p99_all_us"],
@@ -43,20 +51,40 @@ def _row(name, cfg, slo=1e9, seed=0, windows0=None):
                 ep_p99_little=s["ep_p99_little_us"], summary=s)
 
 
+def _row(name, cfg, slo=1e9, seed=0, windows0=None):
+    """Single-cell fallback (bench2's sequential window-carry phases)."""
+    st = sl.run(cfg, slo, seed, windows0)
+    return _rowdict(name, cfg, sl.summarize(cfg, st))
+
+
+def _sweep_rows(cfg, axes, namer, *, slo_us=1e9, product=True, extra=None):
+    """One batched call -> one row per cell (name via ``namer(cell)``)."""
+    st, grid = sl.sweep(cfg, axes, slo_us=slo_us, product=product)
+    rows = []
+    for s in sl.sweep_summaries(cfg, st, grid):
+        cell = {k: s[k] for k in grid}
+        r = _rowdict(namer(cell), cfg, s)
+        r.update({k: v for k, v in cell.items()
+                  if not isinstance(v, tuple)})
+        if extra:
+            r.update(extra(cell, s))
+        rows.append(r)
+    return rows
+
+
 # ---------------------------------------------------------------------------
 # Figure 1: throughput/latency collapse scaling 1..8 threads
 # (TAS shows little-core-affinity in this regime)
+# 24 cells, 3 compilations: the n axis is an active-core mask, w_big traced.
 # ---------------------------------------------------------------------------
 
 def fig1_collapse():
     rows = []
-    for n in range(1, 9):
-        for pol, kw in (("fifo", {}), ("tas", dict(w_big=0.15)),
-                        ("prop", {})):
-            cfg = _cfg(pol, n_cores=n, **kw)
-            r = _row(f"fig1/{pol}/n{n}", cfg)
-            r.update(n_threads=n)
-            rows.append(r)
+    for pol, kw in (("fifo", {}), ("tas", dict(w_big=0.15)), ("prop", {})):
+        rows += _sweep_rows(
+            _cfg(pol, 8, **kw), {"n_cores": list(range(1, 9))},
+            lambda c, p=pol: f"fig1/{p}/n{c['n_cores']}",
+            extra=lambda c, s: dict(n_threads=int(c["n_cores"])))
     return rows
 
 
@@ -66,27 +94,24 @@ def fig1_collapse():
 
 def fig4_big_affinity():
     rows = []
-    for n in range(1, 9):
-        for pol, kw in (("fifo", {}), ("tas", dict(w_big=8.0))):
-            cfg = _cfg(pol, n_cores=n, seg_cs_us=(6.0,), **kw)
-            r = _row(f"fig4/{pol}/n{n}", cfg)
-            r.update(n_threads=n)
-            rows.append(r)
+    for pol, kw in (("fifo", {}), ("tas", dict(w_big=8.0))):
+        rows += _sweep_rows(
+            _cfg(pol, 8, seg_cs_us=(6.0,), **kw),
+            {"n_cores": list(range(1, 9))},
+            lambda c, p=pol: f"fig4/{p}/n{c['n_cores']}",
+            extra=lambda c, s: dict(n_threads=int(c["n_cores"])))
     return rows
 
 
 # ---------------------------------------------------------------------------
-# Figure 5: static proportional trade-off
+# Figure 5: static proportional trade-off (prop_n is a traced batch axis)
 # ---------------------------------------------------------------------------
 
 def fig5_proportional():
-    rows = []
-    for n in (1, 2, 5, 10, 20, 50):
-        cfg = _cfg("prop", prop_n=n)
-        r = _row(f"fig5/prop{n}", cfg)
-        r.update(proportion=n)
-        rows.append(r)
-    return rows
+    return _sweep_rows(
+        _cfg("prop"), {"prop_n": [1, 2, 5, 10, 20, 50]},
+        lambda c: f"fig5/prop{c['prop_n']}",
+        extra=lambda c, s: dict(proportion=int(c["prop_n"])))
 
 
 # ---------------------------------------------------------------------------
@@ -109,32 +134,33 @@ def bench1_contended():
         _row("bench1/shfl-pb10", _bench1_cfg("prop", prop_n=10)),
     ]
     fifo_p99 = rows[0]["ep_p99_all"]
-    for slo in (0.0, fifo_p99, 1.5 * fifo_p99, 2.5 * fifo_p99, 5 * fifo_p99,
-                1e5):
-        tag = "MAX" if slo >= 1e5 else f"{slo:.0f}"
-        # LibASL-MAX = the maximum reorder window directly (paper §4),
-        # not AIMD-grown from the default.
-        kw = dict(default_window_us=1e5) if slo >= 1e5 else {}
-        r = _row(f"bench1/libasl-{tag}", _bench1_cfg("libasl", **kw),
-                 slo=slo)
-        r.update(slo_us=slo)
-        rows.append(r)
+    slos = [0.0, fifo_p99, 1.5 * fifo_p99, 2.5 * fifo_p99, 5 * fifo_p99,
+            1e5]
+    # LibASL-MAX = the maximum reorder window directly (paper §4), not
+    # AIMD-grown from the default: the window0 axis is zipped with the SLO.
+    asl_cfg = _bench1_cfg("libasl")
+    win0 = [asl_cfg.default_window_us] * 5 + [1e5]
+
+    def tag(c):
+        t = "MAX" if c["slo_us"] >= 1e5 else f"{c['slo_us']:.0f}"
+        return f"bench1/libasl-{t}"
+
+    rows += _sweep_rows(asl_cfg, {"slo_us": slos, "window0_us": win0},
+                        tag, product=False)
     return rows
 
 
 def bench1_slo_sweep():
-    """Figure 8b: one vmap over the SLO axis."""
+    """Figure 8b: the whole SLO axis is one batched call."""
     cfg = _bench1_cfg("libasl")
-    slos = np.linspace(20.0, 400.0, 14)
-    st = sl.sweep_slo(cfg, slos)
-    rows = []
-    for i, slo in enumerate(slos):
-        s = sl.summarize(cfg, jax.tree.map(lambda x: x[i], st))
-        rows.append(dict(name=f"bench1_sweep/slo{slo:.0f}", slo_us=float(slo),
-                         tput=s["throughput_cs_per_s"],
-                         ep_p99_little=s["ep_p99_little_us"],
-                         ep_p99_big=s["ep_p99_big_us"]))
-    return rows
+    slos = list(np.linspace(20.0, 400.0, 14))
+    return _sweep_rows(
+        cfg, {"slo_us": slos},
+        lambda c: f"bench1_sweep/slo{c['slo_us']:.0f}",
+        extra=lambda c, s: dict(
+            tput=s["throughput_cs_per_s"],
+            ep_p99_little=s["ep_p99_little_us"],
+            ep_p99_big=s["ep_p99_big_us"]))
 
 
 # ---------------------------------------------------------------------------
@@ -144,7 +170,9 @@ def bench1_slo_sweep():
 def bench2_variable(slo=150.0):
     """Paper Fig 8d: the AIMD window re-converges across load shifts; the
     final phase is deliberately impossible (epoch >> SLO) — LibASL must
-    fall back to FIFO there (windows collapse), exactly as in the paper."""
+    fall back to FIFO there (windows collapse), exactly as in the paper.
+    Sequential by nature (the window state carries across phases; the
+    donated ``windows0`` buffer makes each resume copy-free)."""
     phases = [
         ("base", dict(), True),
         ("x8", dict(seg_noncrit_us=(8.0, 4.0, 4.0, 4.0)), True),
@@ -170,20 +198,26 @@ def bench2_variable(slo=150.0):
 
 # ---------------------------------------------------------------------------
 # Bench-3 (Fig 8c): mixed short/long epochs at different ratios
+# (the mix probability is a traced batch axis: one call per policy)
 # ---------------------------------------------------------------------------
 
 def bench3_mixed(slo=400.0):
+    short_pcts = (0, 20, 40, 60, 80, 100)
+    probs = [1.0 - p / 100.0 for p in short_pcts]
+    kw = dict(long_epoch_prob=1.0, long_epoch_scale=100.0,
+              sim_time_us=120_000.0)
+    asl = _sweep_rows(_bench1_cfg("libasl", **kw),
+                      {"long_epoch_prob": probs},
+                      lambda c: f"bench3/p{c['long_epoch_prob']:.1f}",
+                      slo_us=slo)
+    mcs = _sweep_rows(_bench1_cfg("fifo", **kw),
+                      {"long_epoch_prob": probs},
+                      lambda c: f"bench3/mcs{c['long_epoch_prob']:.1f}")
     rows = []
-    for short_pct in (0, 20, 40, 60, 80, 100):
-        p_long = 1.0 - short_pct / 100.0
-        cfg = _bench1_cfg("libasl", long_epoch_prob=p_long,
-                          long_epoch_scale=100.0, sim_time_us=120_000.0)
-        mcs = _bench1_cfg("fifo", long_epoch_prob=p_long,
-                          long_epoch_scale=100.0, sim_time_us=120_000.0)
-        r = _row(f"bench3/short{short_pct}", cfg, slo=slo)
-        m = _row(f"bench3/mcs{short_pct}", mcs)
-        rows.append(dict(name=r["name"], slo_us=slo, short_pct=short_pct,
-                         tput=r["tput"], tput_vs_mcs=r["tput"] / m["tput"],
+    for pct, r, m in zip(short_pcts, asl, mcs):
+        rows.append(dict(name=f"bench3/short{pct}", slo_us=slo,
+                         short_pct=pct, tput=r["tput"],
+                         tput_vs_mcs=r["tput"] / m["tput"],
                          ep_p99_little=r["ep_p99_little"]))
     return rows
 
@@ -197,48 +231,80 @@ def bench4_scalability():
     # LibASL-MAX keeps the lock on big cores and its throughput curve
     # stays flat as little threads join.
     kw = dict(seg_cs_us=(6.0,), seg_noncrit_us=(0.5,), inter_epoch_us=2.0)
+    ns = list(range(1, 9))
+    fifo = _sweep_rows(_cfg("fifo", **kw), {"n_cores": ns},
+                       lambda c: f"bench4/mcs/n{c['n_cores']}",
+                       extra=lambda c, s: dict(n_threads=int(c["n_cores"])))
+    tas = _sweep_rows(_cfg("tas", w_big=8.0, **kw), {"n_cores": ns},
+                      lambda c: f"bench4/tas/n{c['n_cores']}",
+                      extra=lambda c, s: dict(n_threads=int(c["n_cores"])))
     rows = []
-    for n in range(1, 9):
-        fifo = _row(f"bench4/mcs/n{n}", _cfg("fifo", n_cores=n, **kw))
-        tas = _row(f"bench4/tas/n{n}", _cfg("tas", n_cores=n, w_big=8.0,
-                                            **kw))
-        rows += [dict(fifo, n_threads=n), dict(tas, n_threads=n)]
-        for slo, tag in ((0.0, "0"), (tas["ep_p99_all"], "tas-lat"),
-                         (1e5, "MAX")):
-            wkw = dict(default_window_us=1e5) if slo >= 1e5 else {}
-            r = _row(f"bench4/libasl-{tag}/n{n}",
-                     _cfg("libasl", n_cores=n, **kw, **wkw), slo=slo)
-            r.update(n_threads=n, slo_us=slo)
-            rows.append(r)
+    for f, t in zip(fifo, tas):
+        rows += [f, t]
+
+    # LibASL at 3 SLO points per n — one zipped 24-cell call (slo and
+    # window0 pair with each n; "tas-lat" tracks the measured TAS P99).
+    asl_cfg = _cfg("libasl", **kw)
+    w_dflt = asl_cfg.default_window_us
+    n_ax, slo_ax, win_ax, tags = [], [], [], []
+    for t in tas:
+        n = t["n_threads"]
+        for slo, tag, w0 in ((0.0, "0", w_dflt),
+                             (t["ep_p99_all"], "tas-lat", w_dflt),
+                             (1e5, "MAX", 1e5)):
+            n_ax.append(n)
+            slo_ax.append(slo)
+            win_ax.append(w0)
+            tags.append(f"bench4/libasl-{tag}/n{n}")
+    tag_of = {(n, s): tg for n, s, tg in zip(n_ax, slo_ax, tags)}
+    rows += _sweep_rows(
+        asl_cfg,
+        {"n_cores": n_ax, "slo_us": slo_ax, "window0_us": win_ax},
+        lambda c: tag_of[(int(c["n_cores"]), float(c["slo_us"]))],
+        product=False,
+        extra=lambda c, s: dict(n_threads=int(c["n_cores"])))
     return rows
 
 
 # ---------------------------------------------------------------------------
 # Bench-5 (Fig 8g): contention sweep — little cores help at low contention
+# (the noncrit duration is a table batch axis: 3 calls for 27 cells)
 # ---------------------------------------------------------------------------
 
 def bench5_contention():
+    ncs = (0.5, 1, 2, 4, 8, 16, 32, 64, 128)
+    nc_ax = [(float(nc),) for nc in ncs]
+    kw = dict(seg_cs_us=(2.0,), inter_epoch_us=0.5)
+    # fifo at 8 and 4 active cores x every contention level: one call.
+    fifo = _sweep_rows(
+        _cfg("fifo", **kw), {"seg_noncrit_us": nc_ax, "n_cores": [8, 4]},
+        lambda c: f"bench5/mcs{c['n_cores']}/nc{c['seg_noncrit_us'][0]:g}")
+    tas = _sweep_rows(
+        _cfg("tas", w_big=8.0, **kw), {"seg_noncrit_us": nc_ax},
+        lambda c: f"bench5/tas/nc{c['seg_noncrit_us'][0]:g}")
+    asl = _sweep_rows(
+        _cfg("libasl", default_window_us=1e5, **kw),
+        {"seg_noncrit_us": nc_ax},
+        lambda c: f"bench5/libasl/nc{c['seg_noncrit_us'][0]:g}")
+    mcs8 = {r["name"].rsplit("nc", 1)[1]: r for r in fifo
+            if "/mcs8/" in r["name"]}
+    mcs4 = {r["name"].rsplit("nc", 1)[1]: r for r in fifo
+            if "/mcs4/" in r["name"]}
     rows = []
-    for i, nc in enumerate((0.5, 1, 2, 4, 8, 16, 32, 64, 128)):
-        kw = dict(seg_noncrit_us=(float(nc),), seg_cs_us=(2.0,),
-                  inter_epoch_us=0.5)
-        mcs8 = _row(f"bench5/mcs8/nc{nc}", _cfg("fifo", **kw))
-        mcs4 = _row(f"bench5/mcs4/nc{nc}",
-                    _cfg("fifo", n_cores=4, **kw))
-        tas = _row(f"bench5/tas/nc{nc}", _cfg("tas", w_big=8.0, **kw))
-        asl = _row(f"bench5/libasl/nc{nc}",
-                   _cfg("libasl", default_window_us=1e5, **kw), slo=1e9)
+    for nc, t, a in zip(ncs, tas, asl):
+        key = f"{float(nc):g}"
+        m8, m4 = mcs8[key], mcs4[key]
         rows.append(dict(name=f"bench5/nc{nc}", noncrit_us=nc,
-                         tput_libasl=asl["tput"], tput_mcs8=mcs8["tput"],
-                         tput_mcs4=mcs4["tput"], tput_tas=tas["tput"],
-                         speedup_vs_mcs8=asl["tput"] / mcs8["tput"],
-                         speedup_vs_mcs4=asl["tput"] / mcs4["tput"]))
+                         tput_libasl=a["tput"], tput_mcs8=m8["tput"],
+                         tput_mcs4=m4["tput"], tput_tas=t["tput"],
+                         speedup_vs_mcs8=a["tput"] / m8["tput"],
+                         speedup_vs_mcs4=a["tput"] / m4["tput"]))
     return rows
 
 
 # ---------------------------------------------------------------------------
 # Bench-6: blocking locks / oversubscription — wakeup latency on the
-# FIFO handoff path; LibASL standbys dodge it
+# FIFO handoff path; LibASL standbys dodge it (wakeup is a traced axis)
 # ---------------------------------------------------------------------------
 
 def bench6_blocking():
@@ -247,14 +313,14 @@ def bench6_blocking():
     dodge it.  The simulator models the wakeup cost, not the full OS
     scheduler, so this shows the degradation *trend* rather than the
     paper's 96% pthread-vs-MCS gap (limitation noted in EXPERIMENTS.md)."""
-    rows = []
-    for wakeup in (0.0, 8.0, 20.0):
-        for pol, name in (("fifo", "mcs-park"), ("libasl", "libasl-block")):
-            cfg = _bench1_cfg(pol, wakeup_us=wakeup)
-            r = _row(f"bench6/{name}/w{wakeup:.0f}", cfg,
-                     slo=1e5 if pol == "libasl" else 1e9)
-            r.update(wakeup_us=wakeup)
-            rows.append(r)
+    wk = [0.0, 8.0, 20.0]
+    rows = _sweep_rows(
+        _bench1_cfg("fifo", wakeup_us=20.0), {"wakeup_us": wk},
+        lambda c: f"bench6/mcs-park/w{c['wakeup_us']:.0f}")
+    rows += _sweep_rows(
+        _bench1_cfg("libasl", wakeup_us=20.0), {"wakeup_us": wk},
+        lambda c: f"bench6/libasl-block/w{c['wakeup_us']:.0f}",
+        slo_us=1e5)
     return rows
 
 

@@ -14,11 +14,14 @@ Sections:
 
 from __future__ import annotations
 
+import argparse
 import json
 import time
 from pathlib import Path
 
 import numpy as np
+
+from benchmarks._jax_cache import enable_persistent_cache
 
 ART = Path(__file__).resolve().parents[1] / "artifacts" / "bench"
 
@@ -166,14 +169,36 @@ def _roofline_section(results):
     results["roofline/cells"] = cells
 
 
-def main() -> None:
+SECTIONS = ("paper", "serving", "kernels", "roofline")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--section", action="append", choices=SECTIONS,
+                    default=None,
+                    help="run only the given section(s); repeatable")
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke mode: 0.1x simulator horizons so the "
+                         "paper section fits in CI time")
+    args = ap.parse_args(argv)
+    sections = set(args.section or SECTIONS)
+
+    # Repeated bench invocations (and CI re-runs on an unchanged image)
+    # skip every XLA compile.
+    enable_persistent_cache(ART.parent / "xla_cache")
     ART.mkdir(parents=True, exist_ok=True)
     results = {}
     from benchmarks import paper_figs, serving_bench
-    _run_section("paper", paper_figs.ALL, results)
-    _run_section("serving", serving_bench.ALL, results)
-    _kernel_bench(results)
-    _roofline_section(results)
+    if args.quick:
+        paper_figs.SIM_SCALE = 0.1
+    if "paper" in sections:
+        _run_section("paper", paper_figs.ALL, results)
+    if "serving" in sections:
+        _run_section("serving", serving_bench.ALL, results)
+    if "kernels" in sections:
+        _kernel_bench(results)
+    if "roofline" in sections:
+        _roofline_section(results)
     (ART / "results.json").write_text(json.dumps(results, indent=1,
                                                  default=str))
     print(f"# wrote {ART / 'results.json'}")

@@ -1,0 +1,182 @@
+"""Simulator performance benchmark — tracks the batched sweep engine.
+
+Measures, per paper figure: total wall-clock, the compile/run split (cold
+call vs. hot repeat), simulated events/second, and how many XLA
+executables the figure compiled.  For fig1 it additionally times the
+*per-cell seed path* — one jit per (policy, n_cores) cell with the seed's
+one-event-per-iteration loop (``chunk=1``) — against the batched sweep
+(one executable per policy, all thread counts as an active-core mask).
+
+Writes ``BENCH_simlock.json`` at the repo root so the perf trajectory is
+tracked from PR to PR (protocol in docs/simulator.md).
+
+    PYTHONPATH=src python -m benchmarks.simperf [--quick] [--figs fig1,...]
+"""
+
+from __future__ import annotations
+
+import os
+
+# Must precede the first jax import: per-op shapes in the simulator are
+# tiny (N<=8 cores), so XLA's intra-op threading buys nothing and only
+# thrashes; pinning it lets the concurrently-dispatched policy sweeps
+# (and their compiles) overlap cleanly on the container's cores.
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_cpu_multi_thread_eigen=false"
+                           " intra_op_parallelism_threads=1").strip()
+
+import argparse
+import dataclasses
+import json
+import platform
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from benchmarks._jax_cache import enable_persistent_cache
+from repro.core import simlock as sl
+
+ROOT = Path(__file__).resolve().parents[1]
+OUT = ROOT / "BENCH_simlock.json"
+
+
+def _compiles() -> int:
+    return sl._run_batch._cache_size() + sl._run_single._cache_size()
+
+
+def _events(st) -> int:
+    return int(np.sum(np.asarray(st.events)))
+
+
+def _fig1_policies(quick: bool):
+    """Exactly fig1's workload — reuse paper_figs' calibration so this
+    benchmark can never drift from the figure it claims to track."""
+    from benchmarks import paper_figs
+    paper_figs.SIM_SCALE = 0.1 if quick else 1.0
+    return [paper_figs._cfg(pol, 8, **kw)
+            for pol, kw in (("fifo", {}), ("tas", dict(w_big=0.15)),
+                            ("prop", {}))]
+
+
+def bench_fig1_batched_vs_seed(quick: bool) -> dict:
+    """The acceptance benchmark: fig1's 24 cells, batched vs. per-cell."""
+    from concurrent.futures import ThreadPoolExecutor
+    cfgs = _fig1_policies(quick)
+    ns = list(range(1, 9))
+
+    def one_policy(cfg):
+        st, _ = sl.sweep(cfg, {"n_cores": ns})
+        jax.block_until_ready(st.events)
+        return _events(st)
+
+    # --- batched sweep engine: one executable per policy, the three
+    # policies dispatched concurrently (independent executables; XLA
+    # releases the GIL, so they overlap on the container's cores).  The
+    # seed path below stays sequential — exactly how the seed ran it.
+    with ThreadPoolExecutor(len(cfgs)) as pool:
+        c0 = _compiles()
+        t0 = time.time()
+        events = sum(pool.map(one_policy, cfgs))
+        batched_cold = time.time() - t0
+        batched_compiles = _compiles() - c0
+        t0 = time.time()
+        sum(pool.map(one_policy, cfgs))
+        batched_hot = time.time() - t0
+
+    # --- per-cell seed path: the pre-batching shape of this benchmark:
+    # one executable per (policy, n) cell and one event per loop
+    # iteration (chunk=1), exactly as the seed simulator ran it.
+    from benchmarks import paper_figs
+    c0 = _compiles()
+    t0 = time.time()
+    for cfg in cfgs:
+        for n in ns:
+            cell = dataclasses.replace(
+                paper_figs._cfg(cfg.policy, n, w_big=cfg.w_big), chunk=1)
+            jax.block_until_ready(sl.run(cell, 1e9).events)
+    seed_wall = time.time() - t0
+    seed_compiles = _compiles() - c0
+
+    return {
+        "cells": len(cfgs) * len(ns),
+        "events": events,
+        "batched_wall_s": round(batched_cold, 2),
+        "batched_hot_s": round(batched_hot, 2),
+        "batched_compile_s_est": round(batched_cold - batched_hot, 2),
+        "batched_compilations": batched_compiles,
+        "batched_events_per_s": round(events / batched_hot),
+        "seed_path_wall_s": round(seed_wall, 2),
+        "seed_path_compilations": seed_compiles,
+        "speedup_vs_seed_path": round(seed_wall / batched_cold, 2),
+    }
+
+
+def bench_figures(quick: bool, figs=None) -> dict:
+    """Wall-clock + events/s for every paper figure on the new API."""
+    from benchmarks import paper_figs
+    paper_figs.SIM_SCALE = 0.1 if quick else 1.0
+    out = {}
+    for name, fn in paper_figs.ALL.items():
+        if figs and name not in figs:
+            continue
+        c0 = _compiles()
+        t0 = time.time()
+        rows = fn()
+        wall = time.time() - t0
+        events = sum(r["summary"]["events"] for r in rows if "summary" in r)
+        out[name] = {
+            "rows": len(rows),
+            "wall_s": round(wall, 2),
+            "compilations": _compiles() - c0,
+            "events": events,
+            # None when the figure's rows are derived aggregates that do
+            # not carry raw per-cell summaries (bench2/3/5).
+            "events_per_s": round(events / max(wall, 1e-9)) if events
+            else None,
+        }
+        print(f"{name:22s} rows={len(rows):3d} wall={wall:7.2f}s "
+              f"compiles={out[name]['compilations']} "
+              f"ev/s={out[name]['events_per_s']}", flush=True)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="0.1x sim horizons (CI smoke)")
+    ap.add_argument("--figs", type=str, default=None,
+                    help="comma-separated figure subset")
+    ap.add_argument("--skip-figures", action="store_true",
+                    help="only the fig1 batched-vs-seed acceptance bench")
+    ap.add_argument("--cache", action="store_true",
+                    help="enable the persistent XLA compile cache (OFF by "
+                         "default here: compile-cost measurements must be "
+                         "cache-cold to stay comparable across runs)")
+    args = ap.parse_args()
+    if args.cache:
+        enable_persistent_cache(ROOT / "artifacts" / "xla_cache")
+
+    figs = set(args.figs.split(",")) if args.figs else None
+    rec = {
+        "bench": "simlock",
+        "host": platform.machine(),
+        "jax": jax.__version__,
+        "quick": bool(args.quick),
+        "chunk": sl.SimConfig().chunk,
+    }
+    print("== fig1: batched sweep vs per-cell seed path ==", flush=True)
+    rec["fig1_sweep"] = bench_fig1_batched_vs_seed(args.quick)
+    for k, v in rec["fig1_sweep"].items():
+        print(f"  {k}: {v}")
+    if not args.skip_figures:
+        print("== per-figure wall clock ==", flush=True)
+        rec["figures"] = bench_figures(args.quick, figs)
+
+    OUT.write_text(json.dumps(rec, indent=1))
+    print(f"# wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -31,6 +31,7 @@ with a simulated clock and the live serving engine drives it with
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import itertools
 import typing
 from collections import deque
@@ -151,7 +152,11 @@ class ASLScheduler(SchedulerBase):
                  mi_factor: float = 0.0, mi_threshold: float = 0.5):
         super().__init__(clock)
         self._fifo: deque[WorkItem] = deque()      # enqueued (unbypassable)
-        self._standby: list[WorkItem] = []         # window-bounded
+        # Min-heap of (deadline_t, seq, item): promotion pops expired items
+        # in expiry order and the work-conserving pop takes the earliest
+        # deadline, both O(log n) (the old list was rescanned/re-sorted on
+        # every call).
+        self._standby: list[tuple] = []
         self._windows: dict[int, AIMDWindow] = {}
         self._pct = pct
         self._default_window = default_window
@@ -185,19 +190,16 @@ class ASLScheduler(SchedulerBase):
             self._fifo.append(it)           # lock_immediately
         else:
             it.deadline_t = now + self._win(epoch_id).window
-            self._standby.append(it)        # lock_reorder(window)
+            heapq.heappush(self._standby,   # lock_reorder(window)
+                           (it.deadline_t, it.seq, it))
         return it
 
     def _promote_expired(self, now: float):
-        """Standby items whose reorder window expired enqueue FIFO (Alg.1)."""
-        expired = [it for it in self._standby if it.deadline_t <= now]
-        if expired:
-            self._standby = [it for it in self._standby
-                             if it.deadline_t > now]
-            # Enqueue in expiry order (paper: not arrival order — each
-            # standby has its own window).
-            for it in sorted(expired, key=lambda x: (x.deadline_t, x.seq)):
-                self._fifo.append(it)
+        """Standby items whose reorder window expired enqueue FIFO (Alg.1).
+        Heap order == (deadline_t, seq), so items enqueue in expiry order
+        (paper: not arrival order — each standby has its own window)."""
+        while self._standby and self._standby[0][0] <= now:
+            self._fifo.append(heapq.heappop(self._standby)[2])
 
     def next_item(self):
         now = self._clock()
@@ -206,9 +208,9 @@ class ASLScheduler(SchedulerBase):
             return self._fifo.popleft()
         if self._standby:
             # Queue empty -> the slot is free: work-conserving admission
-            # (paper: standby enqueues when the waiting queue is empty).
-            self._standby.sort(key=lambda x: (x.deadline_t, x.seq))
-            return self._standby.pop(0)
+            # (paper: standby enqueues when the waiting queue is empty);
+            # earliest deadline first == the old full-sort's head.
+            return heapq.heappop(self._standby)[2]
         return None
 
     def observe_epoch(self, epoch_id, latency, slo):

@@ -6,9 +6,7 @@ deterministic discrete-event simulation of an AMP: ``N`` cores with per-core
 speed factors run (non-critical section → acquire → critical section →
 release) loops against ``L`` shared locks under a pluggable lock policy.
 
-The simulator is a single ``jax.lax.while_loop`` over integer event time
-(ticks of 10 ns), so an SLO sweep (paper Figure 8b) is one ``jax.vmap`` and a
-whole figure is one jitted call.  All paper baselines are modeled:
+All paper baselines are modeled:
 
 * ``fifo``    — MCS-equivalent strict FIFO handoff (Implication 1 baseline).
 * ``tas``     — test-and-set with an *asymmetric success rate*: the winner
@@ -25,11 +23,27 @@ Event model (one pending event per core):
   STANDBY end  → reorder window expired → enqueue FIFO
   HOLDER end   → release: record latencies, advance epoch, pick next holder
 QUEUED / SPIN cores carry t_ready=INF and are woken by the releaser.
+
+Batched sweep engine (docs/simulator.md):
+
+The simulator is *one compiled executable per (policy, shape)*, not per
+parameter point.  Everything numeric that the paper sweeps — SLO, ``w_big``,
+``prop_n``, seed, initial reorder windows, active core count, segment
+durations, the long-epoch mix and the wakeup cost — is carried in two traced
+pytrees (:class:`SimTables` from the static program, :class:`SimParams` per
+run) threaded through the event handlers, while :class:`SimConfig` is
+*canonicalized* before being used as the jit static argument.  Thread-count
+scaling runs padded to ``cfg.n_cores`` with an active-core mask, so fig1's
+n=1..8 share one executable.  ``sweep(cfg, axes)`` runs one whole figure
+as a single ``lax.map``-batched call; the inner loop retires ``cfg.chunk``
+events per ``lax.scan`` chunk inside the outer ``while_loop`` to amortize
+dispatch.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from functools import partial
 from typing import NamedTuple
 
@@ -49,7 +63,15 @@ US = 100  # ticks per microsecond
 
 @dataclasses.dataclass(frozen=True)
 class SimConfig:
-    """Static simulator configuration (hashable -> usable as jit static arg)."""
+    """Static simulator configuration (hashable -> usable as jit static arg).
+
+    ``n_cores`` is the *padded* core count of the compiled executable; runs
+    may activate fewer cores (``n_cores`` sweep axis / ``n_active`` param).
+    Numeric fields that are sweepable (w_big, prop_n, default_window_us,
+    long_epoch_*, wakeup_us, segment durations) are defaults only — they are
+    canonicalized out of the jit key and traced, so two configs differing
+    only in those share one executable.
+    """
 
     policy: str = "fifo"
     n_cores: int = 8
@@ -77,10 +99,44 @@ class SimConfig:
     # Bench-6: blocking locks — FIFO handoff to a parked waiter pays a
     # wakeup latency; a standby grabbing a free lock (spinning) does not.
     wakeup_us: float = 0.0
+    # Events retired per lax.scan chunk inside the outer while_loop
+    # (amortizes the loop-condition check; results are chunk-invariant —
+    # the live-guard in _step retires partial tails as no-ops).  128
+    # measured best on CPU for both the single and the batched path.
+    chunk: int = 128
 
     @property
     def policy_id(self) -> int:
         return POLICIES[self.policy]
+
+
+class SimTables(NamedTuple):
+    """Per-program arrays, precomputed once and threaded through handlers
+    (traced, so segment-duration sweeps share one executable)."""
+
+    big: jnp.ndarray       # i32[N] 1 = big core
+    cs_dur: jnp.ndarray    # i32[N,S] CS ticks per (core, segment)
+    nc_dur: jnp.ndarray    # i32[N,S] non-CS ticks per (core, segment)
+    inter: jnp.ndarray     # i32[N] inter-epoch ticks per core
+    seg_lock: jnp.ndarray  # i32[S] lock id per segment
+
+
+class SimParams(NamedTuple):
+    """Per-run traced scalars — the sweepable batch axes."""
+
+    slo: jnp.ndarray         # f32 ticks
+    w_big: jnp.ndarray       # f32 TAS affinity weight
+    prop_n: jnp.ndarray      # i32 proportional ratio
+    n_active: jnp.ndarray    # i32 cores actually running (<= N padded)
+    seed: jnp.ndarray        # i32 PRNG seed
+    long_prob: jnp.ndarray   # f32 long-epoch probability
+    long_scale: jnp.ndarray  # f32 long-epoch noncrit scale
+    wakeup: jnp.ndarray      # i32 parked-waiter handoff ticks
+    # Initial AIMD additive unit (ticks).  Seeded from the *default*
+    # window, NOT the carried windows0: a resumed run whose windows
+    # collapsed to ~0 must keep a regrowth floor, or zero becomes an
+    # absorbing state (window only ever shrinks).
+    unit0: jnp.ndarray       # f32 ticks
 
 
 class SimState(NamedTuple):
@@ -110,25 +166,82 @@ def _ticks(us: float) -> int:
     return int(round(us * US))
 
 
-def init_state(cfg: SimConfig, seed: int = 0, windows0=None) -> SimState:
+# --------------------------------------------------------------------------
+# Static-arg canonicalization: every field that now rides in SimTables /
+# SimParams is wiped from the jit key, so numeric variants share executables.
+# --------------------------------------------------------------------------
+
+def _canon(cfg: SimConfig) -> SimConfig:
+    n, s = cfg.n_cores, len(cfg.seg_cs_us)
+    return dataclasses.replace(
+        cfg, big=(0,) * n, speed_cs=(1.0,) * n, speed_nc=(1.0,) * n,
+        seg_noncrit_us=(0.0,) * s, seg_cs_us=(0.0,) * s, seg_lock=(0,) * s,
+        inter_epoch_us=0.0, w_big=1.0, prop_n=1, default_window_us=0.0,
+        # Only the on/off bit of the mix/wakeup features is static (it
+        # gates whether the RNG draw / handoff add exist in the HLO at
+        # all); the actual values are traced.
+        long_epoch_prob=1.0 if cfg.long_epoch_prob > 0.0 else 0.0,
+        long_epoch_scale=1.0,
+        wakeup_us=1.0 if cfg.wakeup_us > 0.0 else 0.0)
+
+
+def build_tables(cfg: SimConfig) -> SimTables:
+    """Precompute the per-(core, segment) duration tables once per run."""
+    n = cfg.n_cores
+    s = len(cfg.seg_cs_us)
+    return SimTables(
+        big=jnp.asarray(cfg.big[:n], jnp.int32),
+        cs_dur=jnp.asarray(
+            [[_ticks(cfg.seg_cs_us[j] * cfg.speed_cs[c]) for j in range(s)]
+             for c in range(n)], jnp.int32),
+        nc_dur=jnp.asarray(
+            [[_ticks(cfg.seg_noncrit_us[j] * cfg.speed_nc[c])
+              for j in range(s)] for c in range(n)], jnp.int32),
+        inter=jnp.asarray(
+            [_ticks(cfg.inter_epoch_us * cfg.speed_nc[c]) for c in range(n)],
+            jnp.int32),
+        seg_lock=jnp.asarray(cfg.seg_lock, jnp.int32))
+
+
+def build_params(cfg: SimConfig, slo_us, seed=0, n_active=None) -> SimParams:
+    """SimParams from config defaults (each field is a sweep axis)."""
+    slo = (slo_us * US).astype(jnp.float32) if hasattr(slo_us, "astype") \
+        else jnp.float32(_ticks(slo_us))
+    return SimParams(
+        slo=slo,
+        w_big=jnp.float32(cfg.w_big),
+        prop_n=jnp.int32(cfg.prop_n),
+        n_active=jnp.int32(cfg.n_cores if n_active is None else n_active),
+        seed=jnp.int32(seed) if not hasattr(seed, "dtype")
+        else seed.astype(jnp.int32),
+        long_prob=jnp.float32(cfg.long_epoch_prob),
+        long_scale=jnp.float32(cfg.long_epoch_scale),
+        wakeup=jnp.int32(_ticks(cfg.wakeup_us)),
+        unit0=jnp.float32(_ticks(cfg.default_window_us)
+                          * (100.0 - cfg.pct) / 100.0))
+
+
+def _default_windows(cfg: SimConfig) -> np.ndarray:
+    return np.full(cfg.n_cores, _ticks(cfg.default_window_us), np.float32)
+
+
+def _init_state(cfg: SimConfig, tb: SimTables, pm: SimParams,
+                windows0) -> SimState:
     n, l, cap = cfg.n_cores, cfg.n_locks, cfg.epcap
-    nc0 = jnp.asarray(
-        [_ticks(cfg.seg_noncrit_us[0] * cfg.speed_nc[c]) for c in range(n)],
-        jnp.int32)
+    active = jnp.arange(n, dtype=jnp.int32) < pm.n_active
     # Stagger initial arrivals slightly so ties don't all collapse to core 0.
     stagger = jnp.arange(n, dtype=jnp.int32)
+    windows0 = jnp.asarray(windows0, jnp.float32)
     return SimState(
         t=jnp.int32(0),
-        key=jax.random.PRNGKey(seed),
+        key=jax.random.PRNGKey(pm.seed),
         phase=jnp.zeros(n, jnp.int32),
-        t_ready=nc0 + stagger,
+        t_ready=jnp.where(active, tb.nc_dur[:, 0] + stagger, INF),
         seg=jnp.zeros(n, jnp.int32),
         epoch_start=jnp.zeros(n, jnp.int32),
         attempt_t=jnp.zeros(n, jnp.int32),
-        window=(jnp.asarray(windows0, jnp.float32) if windows0 is not None
-                else jnp.full(n, _ticks(cfg.default_window_us), jnp.float32)),
-        unit=jnp.full(n, _ticks(cfg.default_window_us) * (100.0 - cfg.pct) / 100.0,
-                      jnp.float32),
+        window=windows0,
+        unit=jnp.full(n, pm.unit0, jnp.float32),
         q=jnp.full((l, 2, n), -1, jnp.int32),
         q_head=jnp.zeros((l, 2), jnp.int32),
         q_tail=jnp.zeros((l, 2), jnp.int32),
@@ -143,25 +256,12 @@ def init_state(cfg: SimConfig, seed: int = 0, windows0=None) -> SimState:
     )
 
 
-# --------------------------------------------------------------------------
-# Static per-config arrays
-# --------------------------------------------------------------------------
-
-def _tables(cfg: SimConfig):
-    n = cfg.n_cores
-    s = len(cfg.seg_cs_us)
-    big = jnp.asarray(cfg.big[:n], jnp.int32)
-    cs_dur = jnp.asarray(
-        [[_ticks(cfg.seg_cs_us[j] * cfg.speed_cs[c]) for j in range(s)]
-         for c in range(n)], jnp.int32)          # [N,S]
-    nc_dur = jnp.asarray(
-        [[_ticks(cfg.seg_noncrit_us[j] * cfg.speed_nc[c]) for j in range(s)]
-         for c in range(n)], jnp.int32)          # [N,S]
-    inter = jnp.asarray(
-        [_ticks(cfg.inter_epoch_us * cfg.speed_nc[c]) for c in range(n)],
-        jnp.int32)                                # [N]
-    seg_lock = jnp.asarray(cfg.seg_lock, jnp.int32)  # [S]
-    return big, cs_dur, nc_dur, inter, seg_lock
+def init_state(cfg: SimConfig, seed: int = 0, windows0=None) -> SimState:
+    """Back-compat single-run initializer."""
+    tb = build_tables(cfg)
+    pm = build_params(cfg, 0.0, seed)
+    w0 = _default_windows(cfg) if windows0 is None else windows0
+    return _init_state(cfg, tb, pm, w0)
 
 
 # --------------------------------------------------------------------------
@@ -192,20 +292,43 @@ def _qlen(st: SimState, l, b):
     return st.q_tail[l, b] - st.q_head[l, b]
 
 
+def _weighted_pick(key, weights):
+    """Draw an index ~ weights with ONE scalar uniform (shape-independent:
+    zero-weight padding entries never win and never perturb the draw, so a
+    padded-core run is bit-identical to the unpadded one).  The total is
+    cum[-1], NOT jnp.sum: a differently-ordered reduce could land one ulp
+    above the cumsum, letting u fall past every threshold and "pick" a
+    zero-weight index."""
+    cum = jnp.cumsum(weights)
+    total = cum[-1]
+    u = jax.random.uniform(key) * total
+    pick = jnp.argmax(cum > u).astype(jnp.int32)
+    return pick, total > 0.0
+
+
 # --------------------------------------------------------------------------
-# Event handlers
+# Event handlers.
+#
+# Every handler is *fully conditional*: it takes a ``cond`` and commits no
+# state when it is false.  The single-run path dispatches via ``lax.switch``
+# with ``cond=True`` (the masks constant-fold away, so it pays nothing);
+# the batched sweep path applies all handlers as one branchless masked step
+# so ``vmap`` lowers to in-place batched scatters instead of
+# select-over-every-branch full-state copies.
+# ``cond`` must only be combined via logical_and/where (it may be the
+# Python literal True on the switch path).
 # --------------------------------------------------------------------------
 
-def _grant(st: SimState, cfg: SimConfig, cond, c, t, wakeup=False) -> SimState:
+def _grant(st: SimState, cfg: SimConfig, tb: SimTables, pm: SimParams,
+           cond, c, t, wakeup=False) -> SimState:
     """Make core c (if cond) the holder of its lock; schedule its release.
     ``wakeup=True`` models a blocking lock's parked-waiter handoff latency
     (Bench-6): only queue-pop handoffs pay it, spinners/standbys do not."""
-    _, cs_dur, _, _, seg_lock = _tables(cfg)
     c_safe = jnp.maximum(c, 0)
-    l = seg_lock[st.seg[c_safe]]
-    dur = cs_dur[c_safe, st.seg[c_safe]]
-    if wakeup and cfg.wakeup_us:
-        dur = dur + _ticks(cfg.wakeup_us)
+    l = tb.seg_lock[st.seg[c_safe]]
+    dur = tb.cs_dur[c_safe, st.seg[c_safe]]
+    if wakeup and cfg.wakeup_us > 0.0:
+        dur = dur + pm.wakeup
     holder = st.holder.at[l].set(jnp.where(cond, c_safe, st.holder[l]))
     phase = st.phase.at[c_safe].set(
         jnp.where(cond, HOLDER, st.phase[c_safe]))
@@ -214,45 +337,56 @@ def _grant(st: SimState, cfg: SimConfig, cond, c, t, wakeup=False) -> SimState:
     return st._replace(holder=holder, phase=phase, t_ready=t_ready)
 
 
-def _handle_acquire(st: SimState, cfg: SimConfig, c, t) -> SimState:
-    big, _, _, _, seg_lock = _tables(cfg)
-    l = seg_lock[st.seg[c]]
-    st = st._replace(attempt_t=st.attempt_t.at[c].set(t))
-    is_big = big[c] == 1
+def _handle_acquire(st: SimState, cfg: SimConfig, tb: SimTables,
+                    pm: SimParams, c, t, cond) -> SimState:
+    l = tb.seg_lock[st.seg[c]]
+    st = st._replace(attempt_t=st.attempt_t.at[c].set(
+        jnp.where(cond, t, st.attempt_t[c])))
+    is_big = tb.big[c] == 1
     free = st.holder[l] == -1
 
     if cfg.policy == "tas":
         # Free -> grab; else spin (woken at release by weighted draw).
-        st = _grant(st, cfg, free, c, t)
+        grab = jnp.logical_and(free, cond)
+        spin = jnp.logical_and(jnp.logical_not(free), cond)
+        st = _grant(st, cfg, tb, pm, grab, c, t)
         st = st._replace(
-            phase=st.phase.at[c].set(jnp.where(free, st.phase[c], SPIN)),
-            t_ready=st.t_ready.at[c].set(jnp.where(free, st.t_ready[c], INF)))
+            phase=st.phase.at[c].set(jnp.where(spin, SPIN, st.phase[c])),
+            t_ready=st.t_ready.at[c].set(
+                jnp.where(spin, INF, st.t_ready[c])))
         return st
 
     if cfg.policy == "prop":
         q_empty = jnp.logical_and(_qlen(st, l, 0) == 0, _qlen(st, l, 1) == 0)
-        grab = jnp.logical_and(free, q_empty)
-        st = _grant(st, cfg, grab, c, t)
+        grab = jnp.logical_and(jnp.logical_and(free, q_empty), cond)
+        wait = jnp.logical_and(jnp.logical_not(jnp.logical_and(free, q_empty)),
+                               cond)
+        st = _grant(st, cfg, tb, pm, grab, c, t)
         b = jnp.where(is_big, 0, 1)
-        st = _enq(st, ~grab, l, b, c)
+        st = _enq(st, wait, l, b, c)
         st = st._replace(
-            phase=st.phase.at[c].set(jnp.where(grab, st.phase[c], QUEUED)),
-            t_ready=st.t_ready.at[c].set(jnp.where(grab, st.t_ready[c], INF)))
+            phase=st.phase.at[c].set(jnp.where(wait, QUEUED, st.phase[c])),
+            t_ready=st.t_ready.at[c].set(
+                jnp.where(wait, INF, st.t_ready[c])))
         return st
 
     if cfg.policy == "libasl":
         q_empty = _qlen(st, l, 0) == 0
-        grab = jnp.logical_and(free, q_empty)
+        can_grab = jnp.logical_and(free, q_empty)
+        grab = jnp.logical_and(can_grab, cond)
         # Big cores: lock_immediately == FIFO enqueue. Little: standby.
-        enq = jnp.logical_and(~grab, is_big)
-        standby = jnp.logical_and(~grab, ~is_big)
-        st = _grant(st, cfg, grab, c, t)
+        wait = jnp.logical_and(jnp.logical_not(can_grab), cond)
+        enq = jnp.logical_and(wait, is_big)
+        standby = jnp.logical_and(wait, jnp.logical_not(is_big))
+        st = _grant(st, cfg, tb, pm, grab, c, t)
         st = _enq(st, enq, l, 0, c)
-        win = jnp.minimum(st.window[c], _ticks(cfg.max_window_us)).astype(jnp.int32)
-        new_phase = jnp.where(grab, st.phase[c],
-                              jnp.where(is_big, QUEUED, STANDBY))
-        new_ready = jnp.where(grab, st.t_ready[c],
-                              jnp.where(is_big, INF, t + jnp.maximum(win, 0)))
+        win = jnp.minimum(st.window[c],
+                          _ticks(cfg.max_window_us)).astype(jnp.int32)
+        new_phase = jnp.where(enq, QUEUED,
+                              jnp.where(standby, STANDBY, st.phase[c]))
+        new_ready = jnp.where(enq, INF,
+                              jnp.where(standby, t + jnp.maximum(win, 0),
+                                        st.t_ready[c]))
         st = st._replace(
             phase=st.phase.at[c].set(new_phase),
             t_ready=st.t_ready.at[c].set(new_ready))
@@ -260,25 +394,29 @@ def _handle_acquire(st: SimState, cfg: SimConfig, c, t) -> SimState:
 
     # fifo (MCS)
     q_empty = _qlen(st, l, 0) == 0
-    grab = jnp.logical_and(free, q_empty)
-    st = _grant(st, cfg, grab, c, t)
-    st = _enq(st, ~grab, l, 0, c)
+    grab = jnp.logical_and(jnp.logical_and(free, q_empty), cond)
+    wait = jnp.logical_and(jnp.logical_not(jnp.logical_and(free, q_empty)),
+                           cond)
+    st = _grant(st, cfg, tb, pm, grab, c, t)
+    st = _enq(st, wait, l, 0, c)
     st = st._replace(
-        phase=st.phase.at[c].set(jnp.where(grab, st.phase[c], QUEUED)),
-        t_ready=st.t_ready.at[c].set(jnp.where(grab, st.t_ready[c], INF)))
+        phase=st.phase.at[c].set(jnp.where(wait, QUEUED, st.phase[c])),
+        t_ready=st.t_ready.at[c].set(jnp.where(wait, INF, st.t_ready[c])))
     return st
 
 
-def _handle_standby_expiry(st: SimState, cfg: SimConfig, c, t) -> SimState:
+def _handle_standby_expiry(st: SimState, cfg: SimConfig, tb: SimTables,
+                           pm: SimParams, c, t, cond) -> SimState:
     """LibASL little core: reorder window expired -> enqueue FIFO (Alg.1 l.16)."""
-    _, _, _, _, seg_lock = _tables(cfg)
-    l = seg_lock[st.seg[c]]
+    l = tb.seg_lock[st.seg[c]]
     free = jnp.logical_and(st.holder[l] == -1, _qlen(st, l, 0) == 0)
-    st = _grant(st, cfg, free, c, t)
-    st = _enq(st, ~free, l, 0, c)
+    grab = jnp.logical_and(free, cond)
+    wait = jnp.logical_and(jnp.logical_not(free), cond)
+    st = _grant(st, cfg, tb, pm, grab, c, t)
+    st = _enq(st, wait, l, 0, c)
     st = st._replace(
-        phase=st.phase.at[c].set(jnp.where(free, st.phase[c], QUEUED)),
-        t_ready=st.t_ready.at[c].set(jnp.where(free, st.t_ready[c], INF)))
+        phase=st.phase.at[c].set(jnp.where(wait, QUEUED, st.phase[c])),
+        t_ready=st.t_ready.at[c].set(jnp.where(wait, INF, st.t_ready[c])))
     return st
 
 
@@ -289,29 +427,28 @@ def _record(buf, cnt, c, value, cond):
     return buf.at[c, pos].set(val), cnt.at[c].add(jnp.where(cond, 1, 0))
 
 
-def _pick_next(st: SimState, cfg: SimConfig, l, t, slo):
-    """Select & grant the next holder of lock l after a release."""
-    big, cs_dur, _, _, seg_lock = _tables(cfg)
-    n = cfg.n_cores
-
+def _pick_next(st: SimState, cfg: SimConfig, tb: SimTables, pm: SimParams,
+               l, t, cond) -> SimState:
+    """Select & grant the next holder of lock l after a release (if cond).
+    The caller has already cleared the holder; an unsuccessful pick leaves
+    the lock free."""
     if cfg.policy == "tas":
-        spinning = jnp.logical_and(st.phase == SPIN, seg_lock[st.seg] == l)
-        any_spin = jnp.any(spinning)
+        spinning = jnp.logical_and(st.phase == SPIN, tb.seg_lock[st.seg] == l)
         key, sub = jax.random.split(st.key)
-        w = jnp.where(big == 1, cfg.w_big, 1.0)
-        logits = jnp.where(spinning, jnp.log(w), -jnp.inf)
-        winner = jax.random.categorical(sub, logits)
-        st = st._replace(key=key)
-        st = _grant(st, cfg, any_spin, winner, t)
-        holder = st.holder.at[l].set(
-            jnp.where(any_spin, st.holder[l], -1))
-        return st._replace(holder=holder)
+        w = jnp.where(tb.big == 1, pm.w_big, 1.0)
+        winner, any_spin = _weighted_pick(sub, jnp.where(spinning, w, 0.0))
+        st = st._replace(key=jnp.where(cond, key, st.key))
+        st = _grant(st, cfg, tb, pm, jnp.logical_and(any_spin, cond),
+                    winner, t)
+        return st
 
     if cfg.policy == "prop":
         nb, nl = _qlen(st, l, 0), _qlen(st, l, 1)
-        take_big = jnp.logical_and(
-            nb > 0, jnp.logical_or(st.prop_ctr[l] < cfg.prop_n, nl == 0))
-        take_little = jnp.logical_and(~take_big, nl > 0)
+        take_big = jnp.logical_and(jnp.logical_and(
+            nb > 0, jnp.logical_or(st.prop_ctr[l] < pm.prop_n, nl == 0)),
+            cond)
+        take_little = jnp.logical_and(
+            jnp.logical_and(jnp.logical_not(take_big), nl > 0), cond)
         st, cb = _deq(st, take_big, l, 0)
         st, cl = _deq(st, take_little, l, 1)
         nxt = jnp.where(take_big, cb, cl)
@@ -319,53 +456,51 @@ def _pick_next(st: SimState, cfg: SimConfig, l, t, slo):
         ctr = jnp.where(take_big, st.prop_ctr[l] + 1,
                         jnp.where(take_little, 0, st.prop_ctr[l]))
         st = st._replace(prop_ctr=st.prop_ctr.at[l].set(ctr))
-        st = _grant(st, cfg, has, nxt, t, wakeup=True)
-        holder = st.holder.at[l].set(jnp.where(has, st.holder[l], -1))
-        return st._replace(holder=holder)
+        st = _grant(st, cfg, tb, pm, has, nxt, t, wakeup=True)
+        return st
 
     # fifo & libasl: FIFO queue first.
-    nonempty = _qlen(st, l, 0) > 0
+    nonempty = jnp.logical_and(_qlen(st, l, 0) > 0, cond)
     st, cq = _deq(st, nonempty, l, 0)
-    st = _grant(st, cfg, nonempty, cq, t, wakeup=True)
+    st = _grant(st, cfg, tb, pm, nonempty, cq, t, wakeup=True)
 
     if cfg.policy == "libasl":
         # Queue empty -> a standby competitor may grab the free lock
         # (Algorithm 1: "when the waiting queue is empty").
-        standby = jnp.logical_and(st.phase == STANDBY, seg_lock[st.seg] == l)
-        any_standby = jnp.logical_and(~nonempty, jnp.any(standby))
+        standby = jnp.logical_and(st.phase == STANDBY,
+                                  tb.seg_lock[st.seg] == l)
         key, sub = jax.random.split(st.key)
-        logits = jnp.where(standby, 0.0, -jnp.inf)
-        pick = jax.random.categorical(sub, logits)
-        st = st._replace(key=key)
-        st = _grant(st, cfg, any_standby, pick, t)
-        has = jnp.logical_or(nonempty, any_standby)
-        holder = st.holder.at[l].set(jnp.where(has, st.holder[l], -1))
-        return st._replace(holder=holder)
+        pick, any_standby = _weighted_pick(sub, jnp.where(standby, 1.0, 0.0))
+        any_standby = jnp.logical_and(
+            jnp.logical_and(jnp.logical_not(nonempty), any_standby), cond)
+        st = st._replace(key=jnp.where(cond, key, st.key))
+        st = _grant(st, cfg, tb, pm, any_standby, pick, t)
+        return st
 
-    holder = st.holder.at[l].set(jnp.where(nonempty, st.holder[l], -1))
-    return st._replace(holder=holder)
+    return st
 
 
-def _handle_release(st: SimState, cfg: SimConfig, c, t, slo) -> SimState:
-    big, cs_dur, nc_dur, inter, seg_lock = _tables(cfg)
+def _handle_release(st: SimState, cfg: SimConfig, tb: SimTables,
+                    pm: SimParams, c, t, cond) -> SimState:
     s = st.seg[c]
-    l = seg_lock[s]
+    l = tb.seg_lock[s]
     n_seg = len(cfg.seg_cs_us)
 
     # acquire->release latency (paper Figure 1 metric)
     cs_lat, cs_cnt = _record(st.cs_lat, st.cs_cnt, c,
-                             (t - st.attempt_t[c]).astype(jnp.float32), True)
+                             (t - st.attempt_t[c]).astype(jnp.float32), cond)
     st = st._replace(cs_lat=cs_lat, cs_cnt=cs_cnt)
 
     last = s == n_seg - 1
     # Epoch end: record latency, AIMD-update the window (little cores only).
     ep_latency = (t - st.epoch_start[c]).astype(jnp.float32)
-    ep_lat, ep_cnt = _record(st.ep_lat, st.ep_cnt, c, ep_latency, last)
+    ep_lat, ep_cnt = _record(st.ep_lat, st.ep_cnt, c, ep_latency,
+                             jnp.logical_and(last, cond))
     st = st._replace(ep_lat=ep_lat, ep_cnt=ep_cnt)
 
     if cfg.policy == "libasl":
-        adjust = jnp.logical_and(last, big[c] == 0)
-        violated = ep_latency > slo
+        adjust = jnp.logical_and(jnp.logical_and(last, tb.big[c] == 0), cond)
+        violated = ep_latency > pm.slo
         w = jnp.where(violated, st.window[c] * 0.5, st.window[c])
         u = jnp.where(violated, w * (100.0 - cfg.pct) / 100.0, st.unit[c])
         w = jnp.clip(w + u, 0.0, _ticks(cfg.max_window_us))
@@ -374,69 +509,99 @@ def _handle_release(st: SimState, cfg: SimConfig, c, t, slo) -> SimState:
             unit=st.unit.at[c].set(jnp.where(adjust, u, st.unit[c])))
 
     # Bench-3: sample the next epoch's noncrit scale (heterogeneous mix).
-    scale_c = st.scale[c]
+    # Statically gated on the canonicalized on/off bit: the per-release RNG
+    # draw only exists in the HLO when the mix feature is enabled; the
+    # probability/scale themselves are traced (sweepable).
     if cfg.long_epoch_prob > 0.0:
         key, sub = jax.random.split(st.key)
         u = jax.random.uniform(sub)
-        new_scale = jnp.where(u < cfg.long_epoch_prob,
-                              jnp.float32(cfg.long_epoch_scale),
+        new_scale = jnp.where(u < pm.long_prob, pm.long_scale,
                               jnp.float32(1.0))
-        st = st._replace(key=key,
-                         scale=st.scale.at[c].set(
-                             jnp.where(last, new_scale, scale_c)))
-        scale_c = jnp.where(last, new_scale, scale_c)
+        scale_c = jnp.where(jnp.logical_and(last, cond), new_scale,
+                            st.scale[c])
+        st = st._replace(key=jnp.where(cond, key, st.key),
+                         scale=st.scale.at[c].set(scale_c))
 
-    def _sc(d):
-        return (d.astype(jnp.float32) * scale_c).astype(jnp.int32)
+        def _sc(d):
+            return (d.astype(jnp.float32) * scale_c).astype(jnp.int32)
+    else:
+        def _sc(d):
+            return d
 
     # Advance the program: next segment, or inter-epoch gap then segment 0.
     s_next = jnp.where(last, 0, s + 1)
-    ep_start_next = jnp.where(last, t + _sc(inter[c]), st.epoch_start[c])
+    ep_start_next = jnp.where(last, t + _sc(tb.inter[c]), st.epoch_start[c])
     ready = jnp.where(last,
-                      t + _sc(inter[c]) + _sc(nc_dur[c, 0]),
-                      t + _sc(nc_dur[c, jnp.minimum(s + 1, n_seg - 1)]))
+                      t + _sc(tb.inter[c]) + _sc(tb.nc_dur[c, 0]),
+                      t + _sc(tb.nc_dur[c, jnp.minimum(s + 1, n_seg - 1)]))
     st = st._replace(
-        seg=st.seg.at[c].set(s_next),
-        epoch_start=st.epoch_start.at[c].set(ep_start_next),
-        phase=st.phase.at[c].set(NONCRIT),
-        t_ready=st.t_ready.at[c].set(ready))
+        seg=st.seg.at[c].set(jnp.where(cond, s_next, st.seg[c])),
+        epoch_start=st.epoch_start.at[c].set(
+            jnp.where(cond, ep_start_next, st.epoch_start[c])),
+        phase=st.phase.at[c].set(jnp.where(cond, NONCRIT, st.phase[c])),
+        t_ready=st.t_ready.at[c].set(jnp.where(cond, ready, st.t_ready[c])))
 
     # Hand the lock over.
-    st = st._replace(holder=st.holder.at[l].set(-1))
-    return _pick_next(st, cfg, l, t, slo)
+    st = st._replace(holder=st.holder.at[l].set(
+        jnp.where(cond, -1, st.holder[l])))
+    return _pick_next(st, cfg, tb, pm, l, t, cond)
 
 
 # --------------------------------------------------------------------------
 # Main loop
 # --------------------------------------------------------------------------
 
-def _step(cfg: SimConfig, slo, st: SimState) -> SimState:
+def _step(cfg: SimConfig, tb: SimTables, pm: SimParams, horizon,
+          st: SimState, masked: bool) -> SimState:
+    """One event — or nothing, when the run is already past its horizon
+    (`live` guard: lets a fixed-size scan chunk retire a partial tail).
+
+    ``masked=False``: dispatch one handler via ``lax.switch`` (cheapest for
+    a single run).  ``masked=True``: apply every handler under its phase
+    mask — branchless, so a ``vmap`` over sweep lanes lowers to batched
+    in-place scatters instead of per-branch full-state selects."""
     c = jnp.argmin(st.t_ready).astype(jnp.int32)
-    t = st.t_ready[c]
-    st = st._replace(t=t, events=st.events + 1)
+    t = st.t_ready[c]                       # == min(t_ready)
+    live = jnp.logical_and(t < horizon, st.events < cfg.max_events)
+    st = st._replace(t=jnp.where(live, t, st.t),
+                     events=st.events + jnp.where(live, 1, 0))
+
+    if masked:
+        ph = st.phase[c]
+        st = _handle_acquire(st, cfg, tb, pm, c, t,
+                             jnp.logical_and(live, ph == NONCRIT))
+        if cfg.policy == "libasl":   # STANDBY is unreachable elsewhere
+            st = _handle_standby_expiry(st, cfg, tb, pm, c, t,
+                                        jnp.logical_and(live, ph == STANDBY))
+        st = _handle_release(st, cfg, tb, pm, c, t,
+                             jnp.logical_and(live, ph == HOLDER))
+        # QUEUED/SPIN at the head of the clock: defensive re-park.
+        park = jnp.logical_and(live, jnp.logical_or(ph == QUEUED, ph == SPIN))
+        return st._replace(t_ready=st.t_ready.at[c].set(
+            jnp.where(park, INF, st.t_ready[c])))
 
     def acq(s):
-        return _handle_acquire(s, cfg, c, t)
+        return _handle_acquire(s, cfg, tb, pm, c, t, True)
 
     def standby(s):
-        return _handle_standby_expiry(s, cfg, c, t)
+        return _handle_standby_expiry(s, cfg, tb, pm, c, t, True)
 
     def rel(s):
-        return _handle_release(s, cfg, c, t, slo)
+        return _handle_release(s, cfg, tb, pm, c, t, True)
 
     def noop(s):
         return s._replace(t_ready=s.t_ready.at[c].set(INF))
 
-    return jax.lax.switch(st.phase[c], [acq, standby, noop, rel, noop], st)
+    def dead(s):
+        return s
+
+    branch = jnp.where(live, st.phase[c], 5)
+    return jax.lax.switch(branch, [acq, standby, noop, rel, noop, dead], st)
 
 
-@partial(jax.jit, static_argnums=(0,))
-def run(cfg: SimConfig, slo_us, seed=0, windows0=None) -> SimState:
-    """Run the simulation; slo_us may be a traced scalar (vmap over sweeps).
-    ``windows0`` carries AIMD state across phases (Bench-2)."""
-    slo = (slo_us * US).astype(jnp.float32) if hasattr(slo_us, "astype") \
-        else jnp.float32(_ticks(slo_us))
-    st = init_state(cfg, seed, windows0)
+def _simulate(cfg: SimConfig, tb: SimTables, pm: SimParams,
+              windows0, masked: bool = False) -> SimState:
+    st = _init_state(cfg, tb, pm, windows0)
     horizon = jnp.int32(_ticks(cfg.sim_time_us))
 
     def cond(s):
@@ -444,15 +609,172 @@ def run(cfg: SimConfig, slo_us, seed=0, windows0=None) -> SimState:
                                s.events < cfg.max_events)
 
     def body(s):
-        return _step(cfg, slo, s)
+        def chunk_step(s, _):
+            return _step(cfg, tb, pm, horizon, s, masked), None
+        return jax.lax.scan(chunk_step, s, None, length=max(cfg.chunk, 1))[0]
 
     return jax.lax.while_loop(cond, body, st)
 
 
+@partial(jax.jit, static_argnums=(0,), donate_argnums=(3,))
+def _run_single(ccfg: SimConfig, tb: SimTables, pm: SimParams, windows0):
+    return _simulate(ccfg, tb, pm, windows0, masked=False)
+
+
+@partial(jax.jit, static_argnums=(0,), donate_argnums=(3,))
+def _run_batch(ccfg: SimConfig, tb: SimTables, pm: SimParams, windows0):
+    """All leaves carry a leading sweep-cell axis; ONE executable per canon
+    cfg.  The masked (branchless) step keeps the vmap scatter-shaped — a
+    vmapped ``lax.switch`` would select over every branch's full state."""
+    return jax.vmap(
+        lambda t, p, w: _simulate(ccfg, t, p, w, masked=True))(
+            tb, pm, windows0)
+
+
+def run(cfg: SimConfig, slo_us, seed=0, windows0=None) -> SimState:
+    """Run one simulation; slo_us/seed may be traced scalars.
+    ``windows0`` carries AIMD state across phases (Bench-2) and is DONATED —
+    pass a fresh array (reuse the returned ``state.window`` instead)."""
+    tb = build_tables(cfg)
+    pm = build_params(cfg, slo_us, seed)
+    w0 = _default_windows(cfg) if windows0 is None else \
+        jnp.asarray(windows0, jnp.float32)
+    return _run_single(_canon(cfg), tb, pm, w0)
+
+
+# --------------------------------------------------------------------------
+# Batched sweeps: one compiled executable for a whole figure
+# --------------------------------------------------------------------------
+
+# axis name -> SimParams field (values in natural units; converted below)
+_PARAM_AXES = {
+    "slo_us": "slo",
+    "w_big": "w_big",
+    "prop_n": "prop_n",
+    "seed": "seed",
+    "n_cores": "n_active",
+    "long_epoch_prob": "long_prob",
+    "long_epoch_scale": "long_scale",
+    "wakeup_us": "wakeup",
+}
+# axis name -> SimConfig field rebuilt through build_tables per cell
+_TABLE_AXES = ("seg_noncrit_us", "seg_cs_us", "seg_lock", "inter_epoch_us",
+               "big", "speed_cs", "speed_nc")
+SWEEPABLE = tuple(_PARAM_AXES) + _TABLE_AXES + ("window0_us",)
+
+
+def _cell_params(cfg: SimConfig, cell: dict, slo_us, seed) -> SimParams:
+    pm = build_params(cfg, cell.get("slo_us", slo_us),
+                      cell.get("seed", seed),
+                      n_active=cell.get("n_cores", cfg.n_cores))
+    if "w_big" in cell:
+        pm = pm._replace(w_big=jnp.float32(cell["w_big"]))
+    if "prop_n" in cell:
+        pm = pm._replace(prop_n=jnp.int32(cell["prop_n"]))
+    if "long_epoch_prob" in cell:
+        pm = pm._replace(long_prob=jnp.float32(cell["long_epoch_prob"]))
+    if "long_epoch_scale" in cell:
+        pm = pm._replace(long_scale=jnp.float32(cell["long_epoch_scale"]))
+    if "wakeup_us" in cell:
+        pm = pm._replace(wakeup=jnp.int32(_ticks(cell["wakeup_us"])))
+    if "window0_us" in cell:
+        # A swept initial window plays the role of default_window_us (the
+        # seed's LibASL-MAX cells set both), so the unit floor follows it.
+        pm = pm._replace(unit0=jnp.float32(
+            _ticks(cell["window0_us"]) * (100.0 - cfg.pct) / 100.0))
+    return pm
+
+
+def sweep(cfg: SimConfig, axes: dict, *, slo_us=1e9, seed=0,
+          windows0=None, product: bool = True):
+    """Run a whole parameter sweep as ONE vmapped, jitted call.
+
+    ``axes`` maps axis names (see ``SWEEPABLE``) to value lists.  With
+    ``product=True`` (default) the grid is the cross-product in the dict's
+    key order; with ``product=False`` all lists must have equal length and
+    are zipped (pre-flattened grids, e.g. paired slo/window cells).
+
+    ``n_cores`` cells run padded to ``cfg.n_cores`` with an active-core
+    mask — identical results to an unpadded run, one executable for all.
+
+    Returns ``(state, grid)``: ``state`` leaves have a leading cell axis;
+    ``grid`` maps axis name -> np.ndarray of per-cell values.  Non-swept
+    values come from ``cfg`` / ``slo_us`` / ``seed`` / ``windows0``.
+    """
+    if not axes:
+        raise ValueError("empty sweep: pass at least one axis")
+    for name in axes:
+        if name not in SWEEPABLE:
+            raise ValueError(f"unknown sweep axis {name!r}; "
+                             f"sweepable: {SWEEPABLE}")
+    # Sweeping a statically-gated feature must switch its gate on in the
+    # template config (the gate is part of the canonical jit key).
+    for gate in ("long_epoch_prob", "wakeup_us"):
+        if gate in axes and max(axes[gate]) > 0.0:
+            cfg = dataclasses.replace(cfg, **{gate: max(axes[gate])})
+    names = list(axes)
+    vals = [list(axes[k]) for k in names]
+    if product:
+        idx = list(itertools.product(*(range(len(v)) for v in vals)))
+    else:
+        if len({len(v) for v in vals}) > 1:
+            raise ValueError("product=False requires equal-length axes")
+        idx = [(i,) * len(vals) for i in range(len(vals[0]))] \
+            if vals else [()]
+    cells = [{k: vals[j][ii[j]] for j, k in enumerate(names)} for ii in idx]
+    if not cells:
+        raise ValueError("empty sweep")
+    if "n_cores" in axes and max(axes["n_cores"]) > cfg.n_cores:
+        raise ValueError("n_cores axis exceeds the padded cfg.n_cores")
+
+    # Per-cell tables (rebuilt only when a program axis is swept).
+    table_keys = [k for k in names if k in _TABLE_AXES]
+    if table_keys:
+        tbs = [build_tables(dataclasses.replace(
+            cfg, **{k: cell[k] for k in table_keys})) for cell in cells]
+        tb = jax.tree.map(lambda *xs: jnp.stack(xs), *tbs)
+    else:
+        tb1 = build_tables(cfg)
+        tb = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (len(cells),) + x.shape), tb1)
+
+    pms = [_cell_params(cfg, cell, slo_us, seed) for cell in cells]
+    pm = jax.tree.map(lambda *xs: jnp.stack(xs), *pms)
+
+    base_w = _default_windows(cfg) if windows0 is None else \
+        np.asarray(windows0, np.float32)
+    w0 = np.stack([
+        np.full(cfg.n_cores, _ticks(cell["window0_us"]), np.float32)
+        if "window0_us" in cell else base_w for cell in cells])
+
+    st = _run_batch(_canon(cfg), tb, pm, w0)
+    grid = {k: np.asarray([cell[k] for cell in cells], dtype=object)
+            if k in _TABLE_AXES else np.asarray([cell[k] for cell in cells])
+            for k in names}
+    return st, grid
+
+
 def sweep_slo(cfg: SimConfig, slo_us_values, seed=0) -> SimState:
-    """Paper Figure 8b in one call: vmap the whole simulation over SLOs."""
-    slos = jnp.asarray(slo_us_values, jnp.float32)
-    return jax.vmap(lambda s: run(cfg, s, seed))(slos)
+    """Paper Figure 8b in one call (thin wrapper over :func:`sweep`)."""
+    st, _ = sweep(cfg, {"slo_us": list(np.asarray(slo_us_values, float))},
+                  seed=seed)
+    return st
+
+
+def sweep_summaries(cfg: SimConfig, st: SimState, grid: dict,
+                    warmup: int = 32) -> list:
+    """Host-side per-cell summaries of a sweep result (one np transfer)."""
+    st_np = jax.tree.map(np.asarray, st)
+    n_cells = len(next(iter(grid.values()))) if grid else \
+        st_np.events.shape[0]
+    out = []
+    for i in range(n_cells):
+        cell_st = jax.tree.map(lambda x: x[i], st_np)
+        n_act = int(grid["n_cores"][i]) if "n_cores" in grid else None
+        s = summarize(cfg, cell_st, warmup, n_active=n_act)
+        s.update({k: grid[k][i] for k in grid})
+        out.append(s)
+    return out
 
 
 # --------------------------------------------------------------------------
@@ -466,20 +788,23 @@ def _ring_values(buf: np.ndarray, cnt: int, warmup: int = 32) -> np.ndarray:
         return vals[min(warmup, max(cnt - 1, 0)):]
     return buf  # ring wrapped: holds the most recent `cap` samples
 
-def summarize(cfg: SimConfig, st: SimState, warmup: int = 32) -> dict:
-    """Throughput + tail latency per core class (all values in us)."""
-    big = np.asarray(cfg.big[:cfg.n_cores], bool)
-    ep_lat = np.asarray(st.ep_lat)
-    ep_cnt = np.asarray(st.ep_cnt)
-    cs_lat = np.asarray(st.cs_lat)
-    cs_cnt = np.asarray(st.cs_cnt)
+def summarize(cfg: SimConfig, st: SimState, warmup: int = 32,
+              n_active: int = None) -> dict:
+    """Throughput + tail latency per core class (all values in us).
+    ``n_active`` slices per-core outputs for padded sweep cells."""
+    n = cfg.n_cores if n_active is None else int(n_active)
+    big = np.asarray(cfg.big[:n], bool)
+    ep_lat = np.asarray(st.ep_lat)[:n]
+    ep_cnt = np.asarray(st.ep_cnt)[:n]
+    cs_lat = np.asarray(st.cs_lat)[:n]
+    cs_cnt = np.asarray(st.cs_cnt)[:n]
     t_end = float(np.asarray(st.t)) / US
     sim_s = max(t_end, 1e-9) / 1e6
 
     def collect(lat, cnt, mask):
         vals = [
             _ring_values(lat[c], int(cnt[c]), warmup)
-            for c in range(cfg.n_cores) if mask[c]
+            for c in range(n) if mask[c]
         ]
         v = np.concatenate(vals) if vals else np.zeros(0)
         return v / US  # -> microseconds
@@ -499,5 +824,5 @@ def summarize(cfg: SimConfig, st: SimState, warmup: int = 32) -> dict:
         out[f"ep_p99_{name}_us"] = float(np.percentile(ep, 99)) if ep.size else float("nan")
         out[f"ep_p50_{name}_us"] = float(np.percentile(ep, 50)) if ep.size else float("nan")
         out[f"cs_p99_{name}_us"] = float(np.percentile(cs, 99)) if cs.size else float("nan")
-    out["final_window_us"] = (np.asarray(st.window) / US).tolist()
+    out["final_window_us"] = (np.asarray(st.window)[:n] / US).tolist()
     return out

@@ -1,0 +1,2 @@
+"""Distribution substrate: logical-axis sharding rules, bounded-staleness
+commit control, and analytic HLO/collective accounting."""

@@ -1,0 +1,124 @@
+"""Logical-axis sharding rules (GSPMD) for the model stack.
+
+Model code never names mesh axes.  Every parameter/activation carries
+*logical* axis names (``PSpec.axes`` in schemas, ``constrain(x, ...)`` on
+activations); a :class:`Rules` table maps logical axes onto mesh axes for
+the current (mesh, step-kind) cell.  Outside a ``use_mesh`` context every
+constraint is the identity, so single-host tests and CPU smoke runs pay
+nothing and need no mesh.
+
+Shape-aware degradation: a logical axis whose dim is not divisible by the
+mesh-axis size (tiny test configs, ragged vocab) silently degrades to
+replicated instead of failing GSPMD — the dry-run records what actually
+sharded via the compiled memory analysis.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+import threading
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """Mapping: logical axis name -> mesh axis (str | tuple | None)."""
+
+    mesh: object                    # jax Mesh (or None: rules-only tests)
+    table: dict
+
+    def _axis_size(self, mesh_axes) -> int:
+        if self.mesh is None:
+            return 1
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        return math.prod(self.mesh.shape[a] for a in mesh_axes)
+
+    def spec(self, axes, shape=None) -> P:
+        """PartitionSpec for logical ``axes`` (shape-aware, no axis reuse)."""
+        used: set = set()
+        out = []
+        for i, ax in enumerate(axes):
+            m = self.table.get(ax)
+            if m is None:
+                out.append(None)
+                continue
+            names = (m,) if isinstance(m, str) else tuple(m)
+            if any(n in used for n in names):
+                out.append(None)
+                continue
+            if shape is not None and shape[i] % self._axis_size(names):
+                out.append(None)        # non-divisible -> replicate
+                continue
+            used.update(names)
+            out.append(names[0] if len(names) == 1 else names)
+        while out and out[-1] is None:  # trailing Nones are implicit
+            out.pop()
+        return P(*out)
+
+
+def build_rules(mesh, *, kv_heads: int = 0, n_experts: int = 0,
+                step: str = "train", seq_parallel: bool = False,
+                expert_parallel: bool = False) -> Rules:
+    """Default logical->mesh table for one (mesh, step-kind) cell.
+
+    * ``data`` (plus ``pod`` when present) shards the token batch — except
+      at decode, which runs weight-stationary (batch replicated; the MoE
+      layer keys off ``table["batch"] is None`` to pick that path).
+    * ``model`` shards heads / ff / experts / vocab (tensor parallel).
+    """
+    axes = set(mesh.axis_names) if mesh is not None else set()
+    data = tuple(a for a in ("pod", "data") if a in axes) or None
+    if isinstance(data, tuple) and len(data) == 1:
+        data = data[0]
+    model = "model" if "model" in axes else None
+    batch = None if step == "decode" else data
+    table = {
+        "batch": batch,
+        "cache_batch": data,
+        "q_heads": model,
+        "kv_heads": model if kv_heads == 0 or kv_heads > 1 else None,
+        "ff": model,
+        "vocab": model,
+        "experts": ("data" if expert_parallel and "data" in axes
+                    else model) if n_experts else None,
+        "seq_res": model if seq_parallel else None,
+        # replicated everywhere:
+        "embed": None, "act_embed": None, "head_dim": None, "norm": None,
+        "seq": None, "kv_seq": None, "moe_cap": None, "rnn": None,
+    }
+    return Rules(mesh=mesh, table=table)
+
+
+def current_rules() -> Rules | None:
+    """The Rules installed by the innermost ``use_mesh`` (None outside)."""
+    return getattr(_STATE, "rules", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh, rules: Rules = None):
+    """Activate (mesh, rules) for model code in this thread."""
+    if rules is None:
+        rules = build_rules(mesh)
+    prev = current_rules()
+    _STATE.rules = rules
+    try:
+        yield rules
+    finally:
+        _STATE.rules = prev
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint under the active rules (identity if none)."""
+    rules = current_rules()
+    if rules is None or rules.mesh is None:
+        return x
+    spec = rules.spec(axes, x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))

@@ -112,7 +112,10 @@ class ServingEngine:
             self.itl_samples.append(self.clock - self._last_decode_t)
         self.clock += self.cost.decode_step_s
         self._last_decode_t = self.clock
-        for r in list(self.running):
+        # One pass: partition finished/still-running in place (the old
+        # copy + .remove() pattern was O(batch^2) per decode step).
+        still: list[Request] = []
+        for r in self.running:
             r.generated += 1
             if r.first_token_t is None:
                 r.first_token_t = self.clock
@@ -120,8 +123,10 @@ class ServingEngine:
                     r.epoch_id, self.clock - r.arrival_t, r.slo_ttft)
             if r.generated >= r.max_new_tokens:
                 r.finish_t = self.clock
-                self.running.remove(r)
                 self.done.append(r)
+            else:
+                still.append(r)
+        self.running = still
 
     def _run_prefill_chunk(self, r: Request):
         self.clock += self.cost.prefill_chunk_s

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this image")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.aimd import AIMDWindow, aimd_update
 from repro.core.asl_schedule import ASLScheduler

@@ -264,6 +264,25 @@ def test_asl_work_conserving_when_idle():
     assert asl.next_item().payload == "p1"   # no big work: admit at once
 
 
+def test_asl_promotion_expiry_order():
+    """Standbys promote to FIFO in (deadline, seq) order, not arrival order
+    (regression for the heapq refactor: each standby has its own window)."""
+    clk = {"t": 0.0}
+    asl = ASLScheduler(lambda: clk["t"], default_window=10.0,
+                       max_window=100.0)
+    asl.submit("slow", "little", epoch_id=0)     # window 10 -> deadline 10
+    asl.observe_epoch(1, latency=50.0, slo=1.0)  # epoch 1 window halves
+    clk["t"] = 2.0
+    asl.submit("fast", "little", epoch_id=1)     # shorter window, later
+    # arrival but earlier deadline
+    assert asl._standby[0][2].payload == "fast"
+    clk["t"] = 50.0                              # both expired
+    asl.submit("d", "big")
+    got = [asl.next_item().payload for _ in range(3)]
+    assert got == ["fast", "slow", "d"]          # expiry order, then big
+    assert asl.pending() == 0
+
+
 def test_asl_feedback_shrinks_window_on_violation():
     asl = ASLScheduler(lambda: 0.0, default_window=1.0, max_window=10.0)
     w0 = asl.window(0)
