@@ -29,6 +29,12 @@ NC_RATIO = 1.8
 # smoke run of every figure fits in CI time.
 SIM_SCALE = 1.0
 
+# Optional jax.sharding.Mesh: when set (benchmarks/simperf.py --devices N),
+# every figure's sweep shards its cell dimension over MESH's DATA_AXIS —
+# results are bit-identical to the unsharded run (tests/test_sweep.py).
+MESH = None
+DATA_AXIS = "data"
+
 
 def _cfg(policy, n_cores=8, sim_time_us=60_000.0, **kw):
     n_big = min(n_cores, 4)
@@ -59,7 +65,8 @@ def _row(name, cfg, slo=1e9, seed=0, windows0=None):
 
 def _sweep_rows(cfg, axes, namer, *, slo_us=1e9, product=True, extra=None):
     """One batched call -> one row per cell (name via ``namer(cell)``)."""
-    st, grid = sl.sweep(cfg, axes, slo_us=slo_us, product=product)
+    st, grid = sl.sweep(cfg, axes, slo_us=slo_us, product=product,
+                        mesh=MESH, data_axis=DATA_AXIS)
     rows = []
     for s in sl.sweep_summaries(cfg, st, grid):
         cell = {k: s[k] for k in grid}

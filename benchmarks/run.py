@@ -5,11 +5,19 @@ microseconds per produced row; derived = the figure's headline metric) and
 writes full JSON to artifacts/bench/results.json.
 
 Sections:
+  sim            — CI smoke gate: fig1's batched-vs-seed acceptance bench
+                   (speedup >= 3, <= 3 executables) + a sharded-vs-
+                   unsharded sweep parity probe; nonzero exit on failure.
+                   Opt-in (not part of the default all-sections run): it
+                   virtualizes 8 host devices and pins XLA threading,
+                   which would skew the other sections' baselines
   paper figures  — discrete-event AMP simulator (benchmarks/paper_figs.py)
   serving/fleet  — engine + dispatch + straggler sims (serving_bench.py)
   kernels        — per-kernel interpret-mode check vs jnp reference
   roofline       — reads artifacts/roofline/*.json (produced by
                    ``python -m benchmarks.roofline``; compile-heavy)
+
+The smoke gate is ``--section sim --quick``.
 """
 
 from __future__ import annotations
@@ -149,6 +157,59 @@ def _kernel_bench(results):
     _emit("kernels/flash_attention_interp", dt, f"max_err={err:.1e}")
 
 
+def _sim_section(results, quick: bool) -> bool:
+    """CI smoke gate for the simulator engine.  Runs the fig1 batched-vs-
+    seed acceptance bench (the BENCH_simlock.json protocol, abridged) and
+    a sharded-vs-unsharded parity probe; returns False on a gate break."""
+    import jax
+    import numpy as np
+
+    from benchmarks import simperf
+    from repro.core import simlock as sl
+
+    rec = simperf.bench_fig1_batched_vs_seed(quick)
+    results["sim/fig1_sweep"] = rec
+    # --quick horizons are compile-dominated, so the wall ratio reads low
+    # on a cold compile cache; the full >= 3 acceptance number is owned by
+    # the cache-cold simperf protocol (BENCH_simlock.json).  The smoke
+    # floor still catches a de-batched engine (24 compiles ~ speedup < 1).
+    floor = 1.5 if quick else 3.0
+    gate = (rec["speedup_vs_seed_path"] >= floor
+            and rec["batched_compilations"] <= 3)
+    _emit("sim/fig1_sweep", rec["batched_wall_s"] * 1e6 / rec["cells"],
+          f"speedup_vs_seed={rec['speedup_vs_seed_path']}x;"
+          f"compiles={rec['batched_compilations']};"
+          f"coll={rec['hlo']['collective_count']};"
+          f"{'PASS' if gate else 'FAIL'}")
+
+    if len(jax.devices()) < 2:
+        # The sharded half of the gate cannot run — that is itself a gate
+        # break (jax was imported before our 8-device virtualization, or
+        # the caller pinned a single device): report it, don't skip it.
+        results["sim/sharded_parity"] = {"devices": 1,
+                                         "bit_identical": None}
+        _emit("sim/sharded_parity", 0.0,
+              "single device: sharded probe could not run;FAIL")
+        return False
+    from repro.launch.mesh import make_sweep_mesh
+    cfg = sl.SimConfig(policy="libasl", sim_time_us=4_000.0)
+    axes = {"slo_us": [30.0, 70.0], "seed": [0, 1, 2]}
+    a, _ = sl.sweep(cfg, axes)
+    b, _ = sl.sweep(cfg, axes, mesh=make_sweep_mesh())
+    parity = all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+    shard_rec = sl.sweep_log()[-1]
+    results["sim/sharded_parity"] = {
+        "devices": shard_rec["devices"], "bit_identical": parity,
+        "collective_count": shard_rec["collectives"]["total_count"]}
+    _emit("sim/sharded_parity", 0.0,
+          f"devices={shard_rec['devices']};"
+          f"bit_identical={parity};"
+          f"coll={shard_rec['collectives']['total_count']}")
+    return gate and parity
+
+
 def _roofline_section(results):
     art = Path(__file__).resolve().parents[1] / "artifacts" / "roofline"
     cells = []
@@ -169,7 +230,11 @@ def _roofline_section(results):
     results["roofline/cells"] = cells
 
 
-SECTIONS = ("paper", "serving", "kernels", "roofline")
+SECTIONS = ("sim", "paper", "serving", "kernels", "roofline")
+# "sim" is opt-in (--section sim): it mutates the XLA environment
+# (8 virtual devices, pinned intra-op threading), which would silently
+# change the kernel/serving baselines of a default all-sections run.
+DEFAULT_SECTIONS = ("paper", "serving", "kernels", "roofline")
 
 
 def main(argv=None) -> None:
@@ -181,7 +246,19 @@ def main(argv=None) -> None:
                     help="smoke mode: 0.1x simulator horizons so the "
                          "paper section fits in CI time")
     args = ap.parse_args(argv)
-    sections = set(args.section or SECTIONS)
+    sections = set(args.section or DEFAULT_SECTIONS)
+
+    # The sim smoke gate probes the mesh-sharded sweep path: virtualize 8
+    # host devices, and pin XLA's intra-op threading exactly as
+    # benchmarks/simperf.py does (the three policy sweeps compile
+    # concurrently; unpinned they thrash the container's 2 cores and the
+    # speedup gate reads low).  Only effective before the first jax
+    # import, so a caller-provided XLA_FLAGS wins.
+    if "sim" in sections:
+        from repro.launch.xla_flags import ensure_host_devices, prepend
+        prepend("--xla_cpu_multi_thread_eigen=false",
+                "intra_op_parallelism_threads=1")
+        ensure_host_devices(8)
 
     # Repeated bench invocations (and CI re-runs on an unchanged image)
     # skip every XLA compile.
@@ -191,6 +268,9 @@ def main(argv=None) -> None:
     from benchmarks import paper_figs, serving_bench
     if args.quick:
         paper_figs.SIM_SCALE = 0.1
+    sim_ok = True
+    if "sim" in sections:
+        sim_ok = _sim_section(results, args.quick)
     if "paper" in sections:
         _run_section("paper", paper_figs.ALL, results)
     if "serving" in sections:
@@ -202,6 +282,8 @@ def main(argv=None) -> None:
     (ART / "results.json").write_text(json.dumps(results, indent=1,
                                                  default=str))
     print(f"# wrote {ART / 'results.json'}")
+    if not sim_ok:
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

@@ -15,15 +15,23 @@ tracked from PR to PR (protocol in docs/simulator.md).
 
 from __future__ import annotations
 
-import os
+import sys
 
-# Must precede the first jax import: per-op shapes in the simulator are
-# tiny (N<=8 cores), so XLA's intra-op threading buys nothing and only
-# thrashes; pinning it lets the concurrently-dispatched policy sweeps
-# (and their compiles) overlap cleanly on the container's cores.
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
-                           " --xla_cpu_multi_thread_eigen=false"
-                           " intra_op_parallelism_threads=1").strip()
+# Both must precede the first jax import (hence PYTHONPATH=src in every
+# invocation): per-op shapes in the simulator are tiny (N<=8 cores), so
+# XLA's intra-op threading buys nothing and only thrashes — pinning it
+# lets the concurrently-dispatched policy sweeps (and their compiles)
+# overlap cleanly on the container's cores.  --devices N virtualizes N
+# host-platform devices so the sweeps can shard their cell dimension
+# over a data mesh.
+from repro.launch.xla_flags import (argv_device_count, ensure_host_devices,
+                                    prepend)
+
+prepend("--xla_cpu_multi_thread_eigen=false",
+        "intra_op_parallelism_threads=1")
+_n = int(argv_device_count(sys.argv, 1))
+if _n > 1:
+    ensure_host_devices(_n)
 
 import argparse
 import dataclasses
@@ -43,11 +51,28 @@ OUT = ROOT / "BENCH_simlock.json"
 
 
 def _compiles() -> int:
-    return sl._run_batch._cache_size() + sl._run_single._cache_size()
+    return sl.n_batch_executables() + sl._run_single._cache_size()
 
 
 def _events(st) -> int:
     return int(np.sum(np.asarray(st.events)))
+
+
+def _hlo_accounting(log_start: int) -> dict:
+    """Aggregate the analytic HLO accounting of every sweep executable run
+    since ``log_start`` (repro.dist.hlo_analysis via simlock's AOT compile
+    records; cache hits included, single-run ``sl.run`` cells excluded)."""
+    recs = sl.sweep_log()[log_start:]
+    return {
+        "sweep_calls": len(recs),
+        "flops": sum(r["flops"] for r in recs),
+        "bytes_accessed": sum(r["bytes_accessed"] for r in recs),
+        "collective_count": sum(r["collectives"]["total_count"]
+                                for r in recs),
+        "collective_bytes": sum(r["collectives"]["total_bytes"]
+                                for r in recs),
+        "devices": max((r["devices"] for r in recs), default=1),
+    }
 
 
 def _fig1_policies(quick: bool):
@@ -63,11 +88,12 @@ def _fig1_policies(quick: bool):
 def bench_fig1_batched_vs_seed(quick: bool) -> dict:
     """The acceptance benchmark: fig1's 24 cells, batched vs. per-cell."""
     from concurrent.futures import ThreadPoolExecutor
+    from benchmarks import paper_figs
     cfgs = _fig1_policies(quick)
     ns = list(range(1, 9))
 
     def one_policy(cfg):
-        st, _ = sl.sweep(cfg, {"n_cores": ns})
+        st, _ = sl.sweep(cfg, {"n_cores": ns}, mesh=paper_figs.MESH)
         jax.block_until_ready(st.events)
         return _events(st)
 
@@ -75,12 +101,18 @@ def bench_fig1_batched_vs_seed(quick: bool) -> dict:
     # policies dispatched concurrently (independent executables; XLA
     # releases the GIL, so they overlap on the container's cores).  The
     # seed path below stays sequential — exactly how the seed ran it.
-    with ThreadPoolExecutor(len(cfgs)) as pool:
+    # Mesh-sharded sweeps must NOT overlap in one process: XLA CPU's
+    # collective rendezvous interleaves participants from concurrent
+    # executables sharing a device set and deadlocks.
+    n_workers = 1 if paper_figs.MESH is not None else len(cfgs)
+    with ThreadPoolExecutor(n_workers) as pool:
         c0 = _compiles()
+        h0 = len(sl.sweep_log())
         t0 = time.time()
         events = sum(pool.map(one_policy, cfgs))
         batched_cold = time.time() - t0
         batched_compiles = _compiles() - c0
+        hlo = _hlo_accounting(h0)
         t0 = time.time()
         sum(pool.map(one_policy, cfgs))
         batched_hot = time.time() - t0
@@ -88,7 +120,6 @@ def bench_fig1_batched_vs_seed(quick: bool) -> dict:
     # --- per-cell seed path: the pre-batching shape of this benchmark:
     # one executable per (policy, n) cell and one event per loop
     # iteration (chunk=1), exactly as the seed simulator ran it.
-    from benchmarks import paper_figs
     c0 = _compiles()
     t0 = time.time()
     for cfg in cfgs:
@@ -110,6 +141,7 @@ def bench_fig1_batched_vs_seed(quick: bool) -> dict:
         "seed_path_wall_s": round(seed_wall, 2),
         "seed_path_compilations": seed_compiles,
         "speedup_vs_seed_path": round(seed_wall / batched_cold, 2),
+        "hlo": hlo,
     }
 
 
@@ -122,6 +154,7 @@ def bench_figures(quick: bool, figs=None) -> dict:
         if figs and name not in figs:
             continue
         c0 = _compiles()
+        h0 = len(sl.sweep_log())
         t0 = time.time()
         rows = fn()
         wall = time.time() - t0
@@ -135,10 +168,12 @@ def bench_figures(quick: bool, figs=None) -> dict:
             # not carry raw per-cell summaries (bench2/3/5).
             "events_per_s": round(events / max(wall, 1e-9)) if events
             else None,
+            "hlo": _hlo_accounting(h0),
         }
         print(f"{name:22s} rows={len(rows):3d} wall={wall:7.2f}s "
               f"compiles={out[name]['compilations']} "
-              f"ev/s={out[name]['events_per_s']}", flush=True)
+              f"ev/s={out[name]['events_per_s']} "
+              f"coll={out[name]['hlo']['collective_count']}", flush=True)
     return out
 
 
@@ -154,9 +189,17 @@ def main():
                     help="enable the persistent XLA compile cache (OFF by "
                          "default here: compile-cost measurements must be "
                          "cache-cold to stay comparable across runs)")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="virtualize N host devices and shard every sweep's "
+                         "cell dimension over a 1-D data mesh (multi-device "
+                         "path; collective accounting goes nonzero)")
     args = ap.parse_args()
     if args.cache:
         enable_persistent_cache(ROOT / "artifacts" / "xla_cache")
+    if args.devices > 1:
+        from benchmarks import paper_figs
+        from repro.launch.mesh import make_sweep_mesh
+        paper_figs.MESH = make_sweep_mesh(args.devices)
 
     figs = set(args.figs.split(",")) if args.figs else None
     rec = {
@@ -165,6 +208,7 @@ def main():
         "jax": jax.__version__,
         "quick": bool(args.quick),
         "chunk": sl.SimConfig().chunk,
+        "devices": args.devices,
     }
     print("== fig1: batched sweep vs per-cell seed path ==", flush=True)
     rec["fig1_sweep"] = bench_fig1_batched_vs_seed(args.quick)

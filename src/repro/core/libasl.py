@@ -40,7 +40,9 @@ DEFAULT_UNIT_NS = 10.0
 class _EpochTLS(threading.local):
     def __init__(self):
         self.epochs: dict[int, AIMDWindow] = {}
-        self.starts: dict[int, int] = {}
+        # Per-epoch-id stack of start timestamps: reentrant same-id
+        # nesting pops LIFO, so an inner end measures the inner start.
+        self.starts: dict[int, list[int]] = {}
         self.cur_epoch_id: int = -1
         self.stack: list[int] = []
 
@@ -68,15 +70,35 @@ class LibASL:
             tls.epochs[epoch_id] = AIMDWindow(
                 window=DEFAULT_WINDOW_NS, unit=DEFAULT_UNIT_NS, pct=self.pct,
                 max_window=MAX_WINDOW_NS)
-        tls.starts[epoch_id] = self._clock()
+        tls.starts.setdefault(epoch_id, []).append(self._clock())
 
     def epoch_end(self, epoch_id: int, slo_ns: float) -> float:
-        """Returns the measured epoch latency (ns)."""
+        """Returns the measured epoch latency (ns).
+
+        Raises ``RuntimeError`` for an ``epoch_end`` with no matching
+        ``epoch_start`` — silently measuring a ~0 latency here would feed
+        a bogus never-violated sample into AIMD and inflate the caller's
+        reorder window.  Ending an *outer* epoch while an inner one is
+        still open removes it from the nesting stack without disturbing
+        the innermost (governing) epoch.
+        """
         tls = self._tls
-        latency = self._clock() - tls.starts.get(epoch_id, self._clock())
+        opens = tls.starts.get(epoch_id)
+        if not opens:
+            raise RuntimeError(
+                f"epoch_end({epoch_id}) without a matching epoch_start")
+        latency = self._clock() - opens.pop()
+        if not opens:
+            del tls.starts[epoch_id]
         if not self.is_big_core():  # paper line 21: big cores skip adjustment
             tls.epochs[epoch_id].update(latency, slo_ns)
-        tls.cur_epoch_id = tls.stack.pop() if tls.stack else -1
+        if tls.cur_epoch_id == epoch_id:
+            tls.cur_epoch_id = tls.stack.pop() if tls.stack else -1
+        elif epoch_id in tls.stack:  # mismatched nesting: drop the outer
+            # (innermost occurrence, so reentrant same-id nesting unwinds
+            # in order); the governing inner epoch stays current.
+            del tls.stack[len(tls.stack) - 1
+                          - tls.stack[::-1].index(epoch_id)]
         return latency
 
     def current_window_ns(self) -> float:

@@ -41,6 +41,11 @@ class ReorderableLock:
     # -- Algorithm 1, line 5-17 ------------------------------------------
     def lock_reorder(self, window_ns: float) -> None:
         window_ns = min(window_ns, MAX_WINDOW_NS)
+        if window_ns <= 0:
+            # Window fully collapsed by AIMD: the standby phase is empty,
+            # enqueue FIFO at once — no clock reads, no free-lock poll.
+            self.fifo.lock_fifo()
+            return
         if self.fifo.is_lock_free():  # line 7 fast path
             self.fifo.lock_fifo()
             return

@@ -44,12 +44,15 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import threading
 from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.dist.hlo_analysis import executable_stats
 
 # Phases
 NONCRIT, STANDBY, QUEUED, HOLDER, SPIN = 0, 1, 2, 3, 4
@@ -621,14 +624,88 @@ def _run_single(ccfg: SimConfig, tb: SimTables, pm: SimParams, windows0):
     return _simulate(ccfg, tb, pm, windows0, masked=False)
 
 
-@partial(jax.jit, static_argnums=(0,), donate_argnums=(3,))
-def _run_batch(ccfg: SimConfig, tb: SimTables, pm: SimParams, windows0):
-    """All leaves carry a leading sweep-cell axis; ONE executable per canon
-    cfg.  The masked (branchless) step keeps the vmap scatter-shaped — a
-    vmapped ``lax.switch`` would select over every branch's full state."""
-    return jax.vmap(
-        lambda t, p, w: _simulate(ccfg, t, p, w, masked=True))(
-            tb, pm, windows0)
+# --------------------------------------------------------------------------
+# Batched executables: AOT-compiled (lower -> compile -> call) instead of a
+# plain jit so every executable's accounting — XLA FLOPs/bytes and the
+# collective schedule of mesh-sharded sweeps — is captured at compile time
+# (benchmarks/simperf.py records it next to wall-clock per figure).
+# Cache key = (canon cfg, arg shapes/dtypes/shardings): the same one-
+# executable-per-(policy, program) discipline as the jit it replaces.
+# --------------------------------------------------------------------------
+
+_BATCH_EXECS: dict = {}          # key -> (compiled, record)
+_BATCH_LOCK = threading.Lock()   # dict access only; compiles overlap
+
+
+def _leaf_sig(x):
+    sh = x.sharding if isinstance(x, jax.Array) else None
+    return (tuple(x.shape), jnp.dtype(x.dtype).name, sh)
+
+
+def _batch_executable(ccfg: SimConfig, tb: SimTables, pm: SimParams,
+                      windows0):
+    key = (ccfg, tuple(_leaf_sig(x)
+                       for x in jax.tree.leaves((tb, pm, windows0))))
+    with _BATCH_LOCK:
+        hit = _BATCH_EXECS.get(key)
+    if hit is None:
+        def run(t, p, w):
+            """All leaves carry a leading sweep-cell axis.  The masked
+            (branchless) step keeps the vmap scatter-shaped — a vmapped
+            ``lax.switch`` would select over every branch's full state."""
+            return jax.vmap(
+                lambda a, b, c: _simulate(ccfg, a, b, c, masked=True))(
+                    t, p, w)
+        # NO donation here (unlike _run_single, where bench2's window
+        # carry makes it worth it): the windows0 buffer is tiny, and
+        # donating it lets the output `window` leaf alias an input whose
+        # host memory XLA CPU occasionally reuses while a *different*
+        # executable (e.g. a mesh-sharded sweep) runs concurrently —
+        # observed as flaky single-leaf corruption of async results.
+        compiled = jax.jit(run).lower(tb, pm, windows0).compile()
+        rec = executable_stats(compiled)
+        rec["n_cells"] = int(np.shape(pm.slo)[0])
+        rec["devices"] = max((x.sharding.num_devices
+                              for x in jax.tree.leaves((tb, pm, windows0))
+                              if isinstance(x, jax.Array)), default=1)
+        with _BATCH_LOCK:
+            hit = _BATCH_EXECS.setdefault(key, (compiled, rec))
+    return hit
+
+
+def n_batch_executables() -> int:
+    """Distinct batched-sweep executables compiled so far (perf protocol:
+    fig1's 24 cells must stay at 3 — one per policy)."""
+    return len(_BATCH_EXECS)
+
+
+def executable_records() -> list:
+    """Per-executable accounting records in compile order: XLA flops /
+    bytes_accessed, the collective schedule (nonzero only for mesh-sharded
+    sweeps), cell count and device count."""
+    with _BATCH_LOCK:
+        return [rec for _, rec in _BATCH_EXECS.values()]
+
+
+_SWEEP_LOG: list = []
+MAX_SWEEP_LOG = 4096
+
+
+def _log_sweep(rec: dict) -> None:
+    with _BATCH_LOCK:
+        _SWEEP_LOG.append(rec)
+        if len(_SWEEP_LOG) > MAX_SWEEP_LOG:  # bound long-lived processes
+            del _SWEEP_LOG[:-MAX_SWEEP_LOG]
+
+
+def sweep_log() -> list:
+    """One record per :func:`sweep` call (cache hits included) — lets the
+    bench attribute executable accounting to the figure that ran it.
+    Holds the most recent ``MAX_SWEEP_LOG`` calls; slice-by-snapshot-index
+    consumers (benchmarks/simperf.py) are stable as long as fewer than
+    that many sweeps happen between snapshot and read."""
+    with _BATCH_LOCK:
+        return list(_SWEEP_LOG)
 
 
 def run(cfg: SimConfig, slo_us, seed=0, windows0=None) -> SimState:
@@ -686,8 +763,9 @@ def _cell_params(cfg: SimConfig, cell: dict, slo_us, seed) -> SimParams:
 
 
 def sweep(cfg: SimConfig, axes: dict, *, slo_us=1e9, seed=0,
-          windows0=None, product: bool = True):
-    """Run a whole parameter sweep as ONE vmapped, jitted call.
+          windows0=None, product: bool = True,
+          mesh=None, data_axis="data"):
+    """Run a whole parameter sweep as ONE vmapped, compiled call.
 
     ``axes`` maps axis names (see ``SWEEPABLE``) to value lists.  With
     ``product=True`` (default) the grid is the cross-product in the dict's
@@ -696,6 +774,13 @@ def sweep(cfg: SimConfig, axes: dict, *, slo_us=1e9, seed=0,
 
     ``n_cores`` cells run padded to ``cfg.n_cores`` with an active-core
     mask — identical results to an unpadded run, one executable for all.
+
+    ``mesh`` (a ``jax.sharding.Mesh``) shards the cell dimension over the
+    mesh's ``data_axis`` (``repro.dist.sharding.build_sweep_rules``); cells
+    are padded to the next multiple of the shard count (duplicates of the
+    last cell, trimmed from the result), so every device carries an equal
+    contiguous row split and results stay bit-identical to the unsharded
+    run (docs/simulator.md §Sharded sweeps).
 
     Returns ``(state, grid)``: ``state`` leaves have a leading cell axis;
     ``grid`` maps axis name -> np.ndarray of per-cell values.  Non-swept
@@ -747,7 +832,29 @@ def sweep(cfg: SimConfig, axes: dict, *, slo_us=1e9, seed=0,
         np.full(cfg.n_cores, _ticks(cell["window0_us"]), np.float32)
         if "window0_us" in cell else base_w for cell in cells])
 
-    st = _run_batch(_canon(cfg), tb, pm, w0)
+    n_cells, pad = len(cells), 0
+    if mesh is not None:
+        from repro.dist.sharding import build_sweep_rules
+        from jax.sharding import NamedSharding
+        rules = build_sweep_rules(mesh, data_axis=data_axis)
+        n_shards = rules.num_shards("cells")
+        pad = (-n_cells) % n_shards
+        if pad:  # equal row splits: duplicate the last cell, trim below
+            rep = partial(jnp.repeat, repeats=pad, axis=0)
+            tb = jax.tree.map(lambda x: jnp.concatenate([x, rep(x[-1:])]),
+                              tb)
+            pm = jax.tree.map(lambda x: jnp.concatenate([x, rep(x[-1:])]),
+                              pm)
+            w0 = np.concatenate([w0, np.repeat(w0[-1:], pad, axis=0)])
+        ns = NamedSharding(mesh, rules.spec(("cells",), (n_cells + pad,)))
+        tb, pm = jax.device_put((tb, pm), ns)
+        w0 = jax.device_put(w0, ns)
+
+    compiled, rec = _batch_executable(_canon(cfg), tb, pm, w0)
+    _log_sweep(rec)
+    st = compiled(tb, pm, w0)
+    if pad:
+        st = jax.tree.map(lambda x: x[:n_cells], st)
     grid = {k: np.asarray([cell[k] for cell in cells], dtype=object)
             if k in _TABLE_AXES else np.asarray([cell[k] for cell in cells])
             for k in names}

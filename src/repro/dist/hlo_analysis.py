@@ -87,6 +87,26 @@ def analytic_hbm_bytes(cfg, shape) -> float:
     return params * (3 if shape.kind == "train" else 1) + acts
 
 
+def xla_cost(compiled) -> dict:
+    """XLA ``cost_analysis`` as one flat dict, across jax versions (older
+    releases return the dict directly, newer ones a one-element list)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost or {})
+
+
+def executable_stats(compiled) -> dict:
+    """Per-executable accounting: XLA FLOPs/bytes plus the collective
+    schedule parsed from the compiled HLO (the dry-run/bench record)."""
+    cost = xla_cost(compiled)
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "collectives": collective_stats(compiled.as_text()),
+    }
+
+
 def collective_stats(hlo_text: str) -> dict:
     """Parse the compiled HLO: per-collective op counts and result bytes.
 

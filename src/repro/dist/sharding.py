@@ -40,6 +40,12 @@ class Rules:
             mesh_axes = (mesh_axes,)
         return math.prod(self.mesh.shape[a] for a in mesh_axes)
 
+    def num_shards(self, axis: str) -> int:
+        """How many ways logical ``axis`` splits under this table (1 when
+        unmapped or the mesh is absent)."""
+        m = self.table.get(axis)
+        return 1 if m is None else self._axis_size(m)
+
     def spec(self, axes, shape=None) -> P:
         """PartitionSpec for logical ``axes`` (shape-aware, no axis reuse)."""
         used: set = set()
@@ -94,6 +100,34 @@ def build_rules(mesh, *, kv_heads: int = 0, n_experts: int = 0,
         "seq": None, "kv_seq": None, "moe_cap": None, "rnn": None,
     }
     return Rules(mesh=mesh, table=table)
+
+
+def build_sweep_rules(mesh, data_axis="data") -> Rules:
+    """Logical->mesh table for the batched simulator sweep.
+
+    One logical axis matters: ``cells`` — the sweep's leading cell
+    dimension.  It maps onto ``data_axis`` (a mesh axis name or tuple of
+    names; axes absent from the mesh are dropped), everything per-cell
+    stays replicated.  The same shape-aware degradation as the model
+    rules applies: a cell count not divisible by the mesh slice degrades
+    to replicated rather than failing GSPMD — callers that must shard
+    (``simlock.sweep``) pad the cell axis to the next multiple of
+    :meth:`Rules.num_shards` first.
+    """
+    axes = set(mesh.axis_names) if mesh is not None else set()
+    names = (data_axis,) if isinstance(data_axis, str) else tuple(data_axis)
+    present = tuple(a for a in names if a in axes)
+    cells = None if not present else \
+        (present[0] if len(present) == 1 else present)
+    return Rules(mesh=mesh, table={"cells": cells})
+
+
+def row_splits(n_rows: int, n_shards: int) -> list:
+    """Contiguous per-shard row counts for ``n_rows`` tiled over
+    ``n_shards`` (GSPMD equal-block tiling; requires divisibility)."""
+    if n_shards <= 0 or n_rows % n_shards:
+        raise ValueError(f"{n_rows} rows do not tile over {n_shards} shards")
+    return [n_rows // n_shards] * n_shards
 
 
 def current_rules() -> Rules | None:

@@ -1,10 +1,16 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+
+# Virtual host devices must be configured before the first jax import.
+# Default 512 = 2 pods x 256 chips; ``--devices N`` scales it down so a
+# CPU container can run the same path end-to-end (e.g. --devices 8).
+from repro.launch.xla_flags import argv_device_count, ensure_host_devices
+
+ensure_host_devices(argv_device_count(sys.argv, 512))
 
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
-Proves the distribution config is coherent without hardware: 512 placeholder
-host devices stand in for 2 pods x 256 chips.  Per cell we record
+Proves the distribution config is coherent without hardware: placeholder
+host devices stand in for the real chips.  Per cell we record
 ``memory_analysis`` (fits / doesn't), ``cost_analysis`` (FLOPs, bytes) and
 the collective schedule summary into ``artifacts/dryrun/<cell>.json``
 (incremental: cells already on disk are skipped unless --force).
@@ -12,9 +18,13 @@ the collective schedule summary into ``artifacts/dryrun/<cell>.json``
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod both]
+  # CPU-container end-to-end (8 virtual devices, tiny config, small batch):
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b \
+      --shape train_4k --devices 8 --mesh 4x2 --tiny
 """
 
 import argparse
+import dataclasses
 import json
 import time
 import traceback
@@ -25,9 +35,10 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import registry
-from repro.dist.hlo_analysis import analytic_model_flops, collective_stats
+from repro.dist.hlo_analysis import (analytic_model_flops, collective_stats,
+                                     xla_cost)
 from repro.dist.sharding import build_rules, use_mesh
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_mesh, make_production_mesh
 from repro.launch.specs import batch_specs, decode_specs
 from repro.models import lm
 from repro.models.config import cell_applicable, standard_shapes
@@ -103,9 +114,35 @@ def build_cell(cfg, meta, shape, mesh):
     return rules, fn, (aparams, tokens, lengths, acache)
 
 
-def run_cell(arch: str, shape_name: str, multi_pod: bool,
-             force: bool = False, save_hlo: bool = False) -> dict:
-    mesh_tag = "pod2" if multi_pod else "pod1"
+def _tiny_shape(shape, mesh):
+    """Shrink a standard shape so a tiny config compiles in CPU-test time
+    while every mesh axis still has work to shard (batch >= data slice)."""
+    data = int(np.prod([mesh.shape[a] for a in mesh.axis_names
+                        if a != "model"]))
+    return dataclasses.replace(
+        shape, seq_len=min(shape.seq_len, 128),
+        global_batch=max(min(shape.global_batch, 16), data),
+        microbatches=1)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             force: bool = False, save_hlo: bool = False,
+             mesh=None, tiny: bool = False) -> dict:
+    """Lower + compile one (arch, shape, mesh) cell and record its
+    accounting.  Default mesh is the production 16x16 / 2x16x16
+    construction; ``mesh=`` substitutes any other ``launch.mesh`` mesh
+    (e.g. ``make_mesh((4, 2))`` on 8 virtual host devices), and ``tiny``
+    swaps in the arch's reduced CPU config with a shrunken shape — the
+    same build/rules/compile path end-to-end at container scale."""
+    if mesh is not None:
+        mesh_tag = "mesh" + "x".join(str(mesh.shape[a])
+                                     for a in mesh.axis_names)
+    else:
+        mesh_tag = "pod2" if multi_pod else "pod1"
+    # tiny cells must never collide with production cell ids: they would
+    # poison the incremental artifact cache and the *__pod[12].json
+    # production contract (tests/test_system.py).
+    mesh_tag += "_tiny" if tiny else ""
     cell_id = f"{arch}__{shape_name}__{mesh_tag}"
     ARTIFACTS.mkdir(parents=True, exist_ok=True)
     out_path = ARTIFACTS / f"{cell_id}.json"
@@ -113,10 +150,14 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         return json.loads(out_path.read_text())
 
     cfg, meta = registry.get(arch)
+    if tiny:
+        cfg = registry.get_tiny(arch)
     shapes = standard_shapes(meta.train_microbatches)
     shape = shapes[shape_name]
     rec = {"cell": cell_id, "arch": arch, "shape": shape_name,
-           "mesh": "2x16x16" if multi_pod else "16x16", "ok": False}
+           "mesh": "x".join(str(s) for s in mesh.devices.shape)
+           if mesh is not None else ("2x16x16" if multi_pod else "16x16"),
+           "ok": False}
 
     ok, why = cell_applicable(cfg, shape)
     if not ok:
@@ -126,7 +167,13 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
     t0 = time.time()
     try:
-        mesh = make_production_mesh(multi_pod=multi_pod)
+        # Mesh construction belongs inside the try: too few (virtual)
+        # devices for the requested mesh is a per-cell failure to record,
+        # not a reason to abort the whole sweep.
+        if mesh is None:
+            mesh = make_production_mesh(multi_pod=multi_pod)
+        if tiny:
+            shape = _tiny_shape(shape, mesh)
         rules, fn, args = build_cell(cfg, meta, shape, mesh)
         with use_mesh(mesh, rules):
             lowered = fn.lower(*args)
@@ -134,7 +181,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
+            cost = xla_cost(compiled)
         n_dev = int(np.prod(mesh.devices.shape))
         mem_d = {}
         for f in ("generated_code_size_in_bytes", "argument_size_in_bytes",
@@ -172,10 +219,22 @@ def main():
                     default="both")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--devices", type=int, default=512,
+                    help="virtual host device count (set pre-jax-import)")
+    ap.add_argument("--mesh", type=str, default=None,
+                    help="explicit DxM mesh over the virtual devices, e.g. "
+                         "4x2 = (data=4, model=2) — replaces the production "
+                         "mesh so sub-production cells run end-to-end")
+    ap.add_argument("--tiny", action="store_true",
+                    help="reduced per-arch CPU config + shrunken shape")
     args = ap.parse_args()
 
-    pods = {"off": [False], "on": [True], "both": [False, True]}[
-        args.multi_pod]
+    mesh = None
+    if args.mesh:
+        shape = tuple(int(s) for s in args.mesh.split("x"))
+        mesh = make_mesh(shape, ("data", "model")[:len(shape)])
+    pods = [False] if mesh is not None else \
+        {"off": [False], "on": [True], "both": [False, True]}[args.multi_pod]
     archs = [args.arch] if args.arch else [a.replace("_", "-")
                                            for a in registry.ARCHS]
     shapes = [args.shape] if args.shape else list(standard_shapes())
@@ -186,7 +245,8 @@ def main():
             for mp in pods:
                 t0 = time.time()
                 rec = run_cell(arch, shape, mp, force=args.force,
-                               save_hlo=args.save_hlo)
+                               save_hlo=args.save_hlo, mesh=mesh,
+                               tiny=args.tiny)
                 status = "SKIP" if rec.get("skipped") else (
                     "ok" if rec["ok"] else "FAIL")
                 n_fail += 0 if rec["ok"] else 1

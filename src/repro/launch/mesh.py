@@ -19,3 +19,22 @@ def make_host_mesh():
     """Whatever devices exist locally, as a (data, model) mesh (tests)."""
     n = len(jax.devices())
     return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def make_mesh(shape, axes=("data", "model")):
+    """Mesh of the local devices with an explicit logical shape — the
+    sub-production construction dry-runs and CI use with host-platform
+    device virtualization (``--xla_force_host_platform_device_count=N``)."""
+    import math
+    n = len(jax.devices())
+    if math.prod(shape) > n:
+        raise ValueError(f"mesh shape {shape} needs {math.prod(shape)} "
+                         f"devices, only {n} present")
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def make_sweep_mesh(n_devices=None, axis="data"):
+    """1-D data-parallel mesh for ``simlock.sweep(..., mesh=)``: the sweep's
+    cell dimension shards over ``axis``.  Defaults to every local device."""
+    n = len(jax.devices()) if n_devices is None else n_devices
+    return make_mesh((n,), (axis,))

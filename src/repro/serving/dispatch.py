@@ -35,6 +35,15 @@ class Replica:
     busy_until: float = 0.0
 
 
+def spill_index(queue, clock):
+    """Which queued request an ASL spill hands to a free slow replica:
+    the earliest-*deadline* expired standby (paper §3.2 — reorder-window
+    expiry order, not FIFO arrival order), or None when no window has
+    expired yet.  ``queue`` holds (arrival_t, service_s, deadline) rows."""
+    expired = [(d, i) for i, (_, _, d) in enumerate(queue) if clock >= d]
+    return min(expired)[1] if expired else None
+
+
 def simulate_dispatch(policy: str, *, n_fast=4, n_slow=4, slow_factor=3.0,
                       rate_rps=30.0, service_s=0.1, duration_s=300.0,
                       slo=None, pct=99.0, seed=0,
@@ -109,12 +118,9 @@ def simulate_dispatch(policy: str, *, n_fast=4, n_slow=4, slow_factor=3.0,
                 if rf is not None:
                     target = rf    # fast replica: FIFO head takes it
                 elif rs is not None:
-                    # A standby whose window expired enqueues for the slow
-                    # pool — expiry order, not arrival order (paper §3.2).
-                    expired = [(d, i) for i, (_, _, d) in enumerate(queue)
-                               if clock >= d]
-                    if expired:
-                        pick = min(expired)[1]
+                    i = spill_index(queue, clock)
+                    if i is not None:
+                        pick = i
                         target = rs
             if target is not None:
                 a, svc, dead = queue[pick]
@@ -132,11 +138,16 @@ def simulate_dispatch(policy: str, *, n_fast=4, n_slow=4, slow_factor=3.0,
                     served_slow += 1
                 progressed = True
 
+    # Throughput counts every completion; the latency sample alone drops a
+    # 5% warmup prefix (counting after the trim undercounted throughput by
+    # exactly that warmup fraction).
+    completed = len(lat)
     lat = np.array(lat[int(0.05 * len(lat)):] or [np.inf])
     return {
         "policy": policy,
         "n": len(lat),
-        "throughput_rps": len(lat) / max(clock, 1e-9),
+        "completed": completed,
+        "throughput_rps": completed / max(clock, 1e-9),
         "p50": float(np.percentile(lat, 50)),
         "p99": float(np.percentile(lat, 99)),
         "served_fast": served_fast,

@@ -1,0 +1,101 @@
+"""Minimal, dependency-free stand-in for the slice of `hypothesis` that
+`test_properties.py` uses — so the property suite runs even on images
+without the real library (declared in requirements-test.txt; this
+fallback kicks in only when that install is absent).
+
+Scope: `given(**kwargs)` + `settings(max_examples=, deadline=)` and the
+strategies `floats`, `integers`, `lists`, `tuples`, `sampled_from`.
+Examples are drawn from a per-test deterministic PRNG (seeded from the
+test name, so failures reproduce run-to-run); boundary values are mixed
+in with ~15% probability per draw.  No shrinking — the failing example
+is reported as-is.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class strategies:
+    """Namespace mirror of ``hypothesis.strategies`` (the used subset)."""
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        def draw(rng):
+            if rng.random() < 0.15:  # boundary bias
+                return rng.choice((min_value, max_value))
+            return rng.uniform(min_value, max_value)
+        return _Strategy(draw)
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        def draw(rng):
+            if rng.random() < 0.15:
+                return rng.choice((min_value, max_value))
+            return rng.randint(min_value, max_value)
+        return _Strategy(draw)
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        elements = list(elements)
+        return _Strategy(lambda rng: rng.choice(elements))
+
+    @staticmethod
+    def tuples(*elems: _Strategy) -> _Strategy:
+        return _Strategy(lambda rng: tuple(e.draw(rng) for e in elems))
+
+    @staticmethod
+    def lists(elem: _Strategy, *, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elem.draw(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+
+def settings(max_examples: int = 25, deadline=None):
+    """Records run parameters on the test function (deadline is ignored:
+    there is no per-example watchdog here)."""
+    def deco(fn):
+        fn._mh_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategy_kwargs):
+    def deco(fn):
+        max_examples = getattr(fn, "_mh_max_examples", 25)
+
+        @functools.wraps(fn)
+        def runner(*args, **kwargs):
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for i in range(max_examples):
+                example = {k: s.draw(rng)
+                           for k, s in strategy_kwargs.items()}
+                try:
+                    fn(*args, **example, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"{fn.__name__} failed on example {i}: "
+                        f"{example!r}") from e
+
+        # The strategy-filled params must not look like pytest fixtures:
+        # present the signature minus the generated arguments.
+        params = [p for name, p in
+                  inspect.signature(fn).parameters.items()
+                  if name not in strategy_kwargs]
+        runner.__signature__ = inspect.Signature(params)
+        del runner.__wrapped__  # stop inspect from following to fn
+        return runner
+    return deco

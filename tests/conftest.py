@@ -1,0 +1,19 @@
+"""Test-session bootstrap.
+
+Virtualizes 8 host-platform devices *before the first jax import* so the
+multi-device paths — mesh-sharded sweeps (``simlock.sweep(mesh=...)``),
+sweep sharding rules, sub-production dry-run cells — run for real in CI
+on this CPU-only container.  Unsharded computations still place on device
+0 only, so single-device tests are unaffected.
+"""
+
+import sys
+from pathlib import Path
+
+# Make `repro` importable even without PYTHONPATH=src (and for this
+# bootstrap itself, which must run before any jax import).
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.xla_flags import ensure_host_devices  # noqa: E402
+
+ensure_host_devices(8)

@@ -131,6 +131,47 @@ def test_reorder_fast_path_free_lock():
     rl.unlock()
 
 
+class _CountingFIFO:
+    """FIFO stub recording the poll/enqueue sequence (no real blocking)."""
+
+    def __init__(self, free=False):
+        self.free = free
+        self.polls = 0
+        self.locks = 0
+
+    def is_lock_free(self):
+        self.polls += 1
+        return self.free
+
+    def lock_fifo(self):
+        self.locks += 1
+
+    def unlock_fifo(self):
+        pass
+
+
+def test_zero_window_standby_enqueues_immediately():
+    """Regression: a window fully collapsed by AIMD (<= 0) must skip the
+    standby loop entirely — straight to lock_fifo, zero free-lock polls,
+    no monotonic_ns comparison spinning."""
+    for w in (0.0, -5.0):
+        fifo = _CountingFIFO(free=False)
+        rl = ReorderableLock(fifo)
+        rl.lock_reorder(window_ns=w)
+        assert fifo.locks == 1
+        assert fifo.polls == 0
+
+
+def test_positive_window_still_polls_before_enqueue():
+    """The zero-window short-circuit must not swallow the standby phase:
+    with a real window the free-lock fast path still runs."""
+    fifo = _CountingFIFO(free=True)
+    rl = ReorderableLock(fifo)
+    rl.lock_reorder(window_ns=1000.0)
+    assert fifo.locks == 1
+    assert fifo.polls >= 1
+
+
 def test_proportional_ratio():
     """1 little grant after every N big grants (paper Figure 5 policy)."""
     role = threading.local()
@@ -220,6 +261,61 @@ def test_epoch_nesting_and_window_selection():
     clock["t"] += 1
     rt.epoch_end(1, slo_ns=100_000)
     assert rt._tls.cur_epoch_id == -1
+
+
+def test_epoch_end_without_start_raises_not_zero_latency():
+    """Regression: epoch_end with no matching epoch_start used to measure
+    ~0 latency (never-violated) and grow the AIMD window from a bogus
+    sample; it must refuse instead."""
+    clock = {"t": 0}
+    rt = LibASL(is_big_core=lambda: False, clock_ns=lambda: clock["t"])
+    with pytest.raises(RuntimeError):
+        rt.epoch_end(3, slo_ns=100.0)
+    # a completed epoch cannot be ended twice either
+    rt.epoch_start(3)
+    clock["t"] += 50
+    rt.epoch_end(3, slo_ns=100.0)
+    with pytest.raises(RuntimeError):
+        rt.epoch_end(3, slo_ns=100.0)
+
+
+def test_epoch_end_mismatched_nesting_keeps_inner_governing():
+    """Ending an outer epoch while an inner one is open removes the outer
+    from the nesting stack; the inner epoch stays current and the later
+    inner end unwinds cleanly to the remaining stack."""
+    clock = {"t": 0}
+    rt = LibASL(is_big_core=lambda: False, clock_ns=lambda: clock["t"])
+    rt.epoch_start(1)
+    rt.epoch_start(2)
+    rt.epoch_start(3)                 # stack [1, 2], current 3
+    clock["t"] += 10
+    rt.epoch_end(2, slo_ns=1000.0)    # outer end out of order
+    assert rt._tls.cur_epoch_id == 3  # inner still governs
+    assert rt._tls.stack == [1]
+    clock["t"] += 10
+    rt.epoch_end(3, slo_ns=1000.0)
+    assert rt._tls.cur_epoch_id == 1
+    clock["t"] += 10
+    rt.epoch_end(1, slo_ns=1000.0)
+    assert rt._tls.cur_epoch_id == -1
+    assert rt._tls.stack == []
+
+
+def test_epoch_reentrant_same_id_balanced():
+    """Reentrant same-id nesting: per-id start timestamps stack LIFO, so
+    the inner end measures the inner start and the balanced outer end
+    measures the outer one (not a bogus re-used slot / raise)."""
+    clock = {"t": 0}
+    rt = LibASL(is_big_core=lambda: False, clock_ns=lambda: clock["t"])
+    rt.epoch_start(5)             # outer at t=0
+    clock["t"] = 100
+    rt.epoch_start(5)             # inner at t=100
+    clock["t"] = 130
+    assert rt.epoch_end(5, slo_ns=1e9) == 30    # inner: 130-100
+    clock["t"] = 150
+    assert rt.epoch_end(5, slo_ns=1e9) == 150   # outer: 150-0
+    assert rt._tls.cur_epoch_id == -1
+    assert rt._tls.stack == [] and rt._tls.starts == {}
 
 
 def test_big_core_skips_adjustment():

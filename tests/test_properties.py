@@ -1,13 +1,19 @@
-"""Property-based tests (hypothesis) on the system's invariants."""
+"""Property-based tests on the system's invariants.
+
+Runs under `hypothesis` when installed (requirements-test.txt); otherwise
+falls back to the vendored deterministic mini-implementation in
+``tests/_minihypothesis.py`` so the suite never silently skips.
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip(
-    "hypothesis", reason="hypothesis not installed in this image")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # vendored fallback: same API subset, no shrinking
+    from _minihypothesis import given, settings, strategies as st
 
 from repro.core.aimd import AIMDWindow, aimd_update
 from repro.core.asl_schedule import ASLScheduler

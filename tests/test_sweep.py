@@ -117,3 +117,79 @@ def test_sweep_rejects_unknown_axis_and_oversize_n():
         sl.sweep(cfg, {"bogus": [1]})
     with pytest.raises(ValueError):
         sl.sweep(cfg, {"n_cores": [cfg.n_cores + 1]})
+
+
+# ---------------------------------------------------------------------------
+# Mesh-sharded sweeps (conftest virtualizes 8 host devices)
+# ---------------------------------------------------------------------------
+
+def _mesh():
+    from repro.launch.mesh import make_sweep_mesh
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >1 (virtual) device")
+    return make_sweep_mesh()
+
+
+def test_sharded_sweep_bit_identical_to_unsharded():
+    """The tentpole invariant: sharding the cell dimension over the device
+    mesh changes the schedule, not the numbers — every SimState leaf is
+    exactly equal, including a non-divisible cell count (6 cells over 8
+    devices => pad + trim)."""
+    mesh = _mesh()
+    cfg = sl.SimConfig(policy="libasl", sim_time_us=6_000.0)
+    axes = {"slo_us": [30.0, 50.0, 70.0], "seed": [0, 1]}
+    a, ga = sl.sweep(cfg, axes)
+    b, gb = sl.sweep(cfg, axes, mesh=mesh)
+    for k in ga:
+        np.testing.assert_array_equal(ga[k], gb[k])
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_sharded_sweep_follows_row_splits():
+    """Per-device work obeys the sweep sharding rules: the cell axis is
+    tiled in equal contiguous row splits over the mesh's data axis."""
+    from repro.dist.sharding import build_sweep_rules, row_splits
+    mesh = _mesh()
+    rules = build_sweep_rules(mesh)
+    n_shards = rules.num_shards("cells")
+    assert n_shards == len(jax.devices())
+    cfg = sl.SimConfig(policy="fifo", sim_time_us=2_000.0)
+    n_cells = 2 * n_shards
+    st, _ = sl.sweep(cfg, {"seed": list(range(n_cells))}, mesh=mesh)
+    assert st.events.sharding.spec == rules.spec(("cells",), (n_cells,))
+    splits = row_splits(n_cells, n_shards)
+    got = [s.data.shape[0] for s in st.events.addressable_shards]
+    assert sorted(got) == sorted(splits)
+
+
+def test_sharded_executable_records_collectives():
+    """The batched executable's accounting record: a sharded sweep carries
+    cross-device collectives (the while_loop termination reduce), an
+    unsharded one carries none."""
+    mesh = _mesh()
+    cfg = sl.SimConfig(policy="tas", sim_time_us=2_000.0)
+    axes = {"w_big": [0.5, 1.0, 2.0, 4.0] * 2}
+    n0 = len(sl.sweep_log())
+    sl.sweep(cfg, axes)
+    sl.sweep(cfg, axes, mesh=mesh)
+    unsharded, sharded = sl.sweep_log()[n0:]
+    assert unsharded["devices"] == 1
+    assert unsharded["collectives"]["total_count"] == 0
+    assert sharded["devices"] == len(jax.devices())
+    assert sharded["collectives"]["total_count"] > 0
+    assert sharded["flops"] >= 0.0
+
+
+def test_sweep_rules_degrade_without_data_axis():
+    """A mesh without the requested data axis replicates instead of
+    failing (same degradation discipline as the model rules)."""
+    from repro.dist.sharding import build_sweep_rules
+    mesh = _mesh()
+    rules = build_sweep_rules(mesh, data_axis="model")
+    assert rules.num_shards("cells") == 1
+    cfg = sl.SimConfig(policy="fifo", sim_time_us=1_000.0)
+    a, _ = sl.sweep(cfg, {"seed": [0, 1]})
+    b, _ = sl.sweep(cfg, {"seed": [0, 1]}, mesh=mesh, data_axis="model")
+    np.testing.assert_array_equal(np.asarray(a.events),
+                                  np.asarray(b.events))
