@@ -310,6 +310,66 @@ def bench5_contention():
 
 
 # ---------------------------------------------------------------------------
+# Load-latency sweep (queue_flex-style): offered-load sweep -> throughput
+# + P99 per policy on the stochastic workload model (repro.workloads):
+# open-loop Poisson think times, lognormal services.  The load axis rides
+# as the traced ``arrival_rate`` sweep dimension — one executable per
+# policy for the whole curve.
+# ---------------------------------------------------------------------------
+
+def _loadlat_rate(frac: float) -> float:
+    """wl_rate that offers ``frac`` of lock capacity: bisect the
+    utilization model U(r) = sum_c cs_c / (cs_c + think_c / r), with the
+    per-core cs/think times derived from the same ``_cfg`` calibration
+    the sweep runs (so a calibration change cannot desynchronize the
+    load labels)."""
+    cfg = _cfg("fifo", 8)
+    cs = [sum(d * cfg.speed_cs[c] for d in cfg.seg_cs_us)
+          for c in range(cfg.n_cores)]
+    think = [(sum(cfg.seg_noncrit_us) + cfg.inter_epoch_us)
+             * cfg.speed_nc[c] for c in range(cfg.n_cores)]
+
+    def util(r):
+        return sum(c / (c + th / r) for c, th in zip(cs, think))
+
+    lo, hi = 1e-4, 1e4
+    for _ in range(80):
+        mid = (lo * hi) ** 0.5
+        if util(mid) < frac:
+            lo = mid
+        else:
+            hi = mid
+    return float((lo * hi) ** 0.5)
+
+
+def loadlat_sweep(slo=200.0):
+    """Throughput + tail latency vs offered load, one curve per policy —
+    the macro-benchmark shape of the paper's Table 1 databases.  The
+    load grid is shared with the dispatch-fleet sweep
+    (serving_bench.LOAD_FRACS)."""
+    from benchmarks.serving_bench import LOAD_FRACS
+    # The shared grid plus two saturated points — the regime where the
+    # policies separate (queue_flex's "excess tail latency" knee).
+    fracs = tuple(LOAD_FRACS) + (1.5, 3.0)
+    rates = [_loadlat_rate(f) for f in fracs]
+    wl = dict(wl=True, wl_process="poisson", wl_service="lognormal",
+              wl_cv=1.0, sim_time_us=80_000.0)
+    rows = []
+    for pol, kw, slo_us in (("fifo", {}, 1e9),
+                            ("tas", dict(w_big=8.0), 1e9),
+                            ("prop", {}, 1e9),
+                            ("libasl", {}, slo)):
+        rows += _sweep_rows(
+            _cfg(pol, 8, **wl, **kw), {"arrival_rate": rates},
+            lambda c, p=pol: (f"loadlat/{p}/"
+                              f"f{fracs[rates.index(c['arrival_rate'])]:.2f}"),
+            slo_us=slo_us,
+            extra=lambda c, s: dict(
+                load_frac=fracs[rates.index(c["arrival_rate"])]))
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # Bench-6: blocking locks / oversubscription — wakeup latency on the
 # FIFO handoff path; LibASL standbys dodge it (wakeup is a traced axis)
 # ---------------------------------------------------------------------------
@@ -342,4 +402,5 @@ ALL = {
     "bench4_scalability": bench4_scalability,
     "bench5_contention": bench5_contention,
     "bench6_blocking": bench6_blocking,
+    "loadlat_sweep": loadlat_sweep,
 }

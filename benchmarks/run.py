@@ -12,12 +12,16 @@ Sections:
                    virtualizes 8 host devices and pins XLA threading,
                    which would skew the other sections' baselines
   paper figures  — discrete-event AMP simulator (benchmarks/paper_figs.py)
-  serving/fleet  — engine + dispatch + straggler sims (serving_bench.py)
+  serving/fleet  — engine + dispatch + straggler sims (serving_bench.py);
+                   also a CI gate: ASL must hold its TTFT P99 within
+                   1.5x its SLO and FIFO must not beat ASL on token
+                   throughput — nonzero exit on a break
   kernels        — per-kernel interpret-mode check vs jnp reference
   roofline       — reads artifacts/roofline/*.json (produced by
                    ``python -m benchmarks.roofline``; compile-heavy)
 
-The smoke gate is ``--section sim --quick``.
+The smoke gates are ``--section sim --quick`` and
+``--section serving --quick``.
 """
 
 from __future__ import annotations
@@ -116,14 +120,26 @@ def _headline(name, rows) -> str:
                     f"fifo_itl_p99={by['fifo']['itl_p99'] * 1e3:.0f}ms;"
                     f"asl_itl_p99={by['asl']['itl_p99'] * 1e3:.0f}ms")
         if name == "dispatch_fleet":
-            lo = [r for r in rows if r["rate_rps"] == 10.0]
-            hi = [r for r in rows if r["rate_rps"] == 48.0]
-            g = {r["name"].split("/")[1]: r for r in lo}
-            h = {r["name"].split("/")[1]: r for r in hi}
+            fr = sorted({r["load_frac"] for r in rows})
+            g = {r["name"].split("/")[1]: r for r in rows
+                 if r["load_frac"] == fr[0]}
+            h = {r["name"].split("/")[1]: r for r in rows
+                 if r["load_frac"] == fr[-1]}
             return (f"low:asl_p99={g['asl']['p99'] * 1e3:.0f}ms_vs_fair="
                     f"{g['fair']['p99'] * 1e3:.0f}ms;"
                     f"high:asl_rps={h['asl']['throughput_rps']:.0f}_vs_"
                     f"fastonly={h['fast-only']['throughput_rps']:.0f}")
+        if name == "db_multiclass":
+            asl = next(r for r in rows if r["name"].endswith("asl"))
+            return (f"asl:lc_p99={asl['latency-critical/ttft_p99']:.2f}s,"
+                    f"be_p99={asl['best-effort/ttft_p99']:.2f}s")
+        if name == "loadlat_sweep":
+            hi = max(r["load_frac"] for r in rows)
+            h = {r["policy"]: r for r in rows if r["load_frac"] == hi}
+            return (f"load{hi:.0%}:libasl_tput_vs_mcs="
+                    f"{h['libasl']['tput'] / h['fifo']['tput']:.2f}x;"
+                    f"libasl_p99={h['libasl']['ep_p99_little']:.0f}us"
+                    f"_vs_mcs={h['fifo']['ep_p99_little']:.0f}us")
         if name == "straggler_training":
             by = {r["name"].split("/")[-1]: r for r in rows}
             return (f"asl_vs_sync={by['asl-staleness']['steps_per_s'] / by['sync']['steps_per_s']:.2f}x;"
@@ -210,6 +226,40 @@ def _sim_section(results, quick: bool) -> bool:
     return gate and parity
 
 
+def _serving_section(results, quick: bool) -> bool:
+    """CI gate for the serving stack (mirrors ``--section sim``): runs
+    every serving bench, then gates on the db_serving rows — ASL must
+    keep its TTFT P99 within ``SERVING_P99_FLOOR`` x its SLO, and FIFO
+    must not beat ASL on token throughput.  Returns False on a break."""
+    from benchmarks import serving_bench
+    if quick:
+        serving_bench.SCALE = 0.25
+    _run_section("serving", serving_bench.ALL, results)
+    by = {r["name"].split("/")[-1]: r
+          for r in results["serving/db_serving"]}
+    asl, fifo = by["asl"], by["fifo"]
+    slo = asl["slo_ttft"]
+    p99_ok = asl["ttft_p99"] <= SERVING_P99_FLOOR * slo
+    tput_ok = asl["throughput_tok_s"] >= 0.95 * fifo["throughput_tok_s"]
+    gate = bool(p99_ok and tput_ok)
+    results["serving/gate"] = {
+        "asl_ttft_p99": asl["ttft_p99"], "slo_ttft": slo,
+        "p99_floor": SERVING_P99_FLOOR,
+        "asl_tok_s": asl["throughput_tok_s"],
+        "fifo_tok_s": fifo["throughput_tok_s"],
+        "p99_ok": bool(p99_ok), "tput_ok": bool(tput_ok), "pass": gate}
+    _emit("serving/gate", 0.0,
+          f"asl_p99={asl['ttft_p99']:.2f}s(slo={slo:g}s,"
+          f"floor={SERVING_P99_FLOOR:g}x);"
+          f"asl_tok_s={asl['throughput_tok_s']:.0f}_vs_"
+          f"fifo={fifo['throughput_tok_s']:.0f};"
+          f"{'PASS' if gate else 'FAIL'}")
+    return gate
+
+
+SERVING_P99_FLOOR = 1.5
+
+
 def _roofline_section(results):
     art = Path(__file__).resolve().parents[1] / "artifacts" / "roofline"
     cells = []
@@ -265,16 +315,16 @@ def main(argv=None) -> None:
     enable_persistent_cache(ART.parent / "xla_cache")
     ART.mkdir(parents=True, exist_ok=True)
     results = {}
-    from benchmarks import paper_figs, serving_bench
+    from benchmarks import paper_figs
     if args.quick:
         paper_figs.SIM_SCALE = 0.1
-    sim_ok = True
+    sim_ok = serving_ok = True
     if "sim" in sections:
         sim_ok = _sim_section(results, args.quick)
     if "paper" in sections:
         _run_section("paper", paper_figs.ALL, results)
     if "serving" in sections:
-        _run_section("serving", serving_bench.ALL, results)
+        serving_ok = _serving_section(results, args.quick)
     if "kernels" in sections:
         _kernel_bench(results)
     if "roofline" in sections:
@@ -282,7 +332,7 @@ def main(argv=None) -> None:
     (ART / "results.json").write_text(json.dumps(results, indent=1,
                                                  default=str))
     print(f"# wrote {ART / 'results.json'}")
-    if not sim_ok:
+    if not (sim_ok and serving_ok):
         raise SystemExit(1)
 
 

@@ -18,20 +18,45 @@ import numpy as np
 from repro.dist.staleness import BoundedStalenessController, simulate
 from repro.serving.dispatch import simulate_dispatch
 from repro.serving.engine import CostModel, ServingEngine, poisson_workload
+from repro.workloads import ClientClass, WorkloadMix
+from repro.workloads.clients import metrics_by_class, multiclass_workload
+
+# ---------------------------------------------------------------------------
+# The ONE policy/load grid.  db_serving, dispatch_fleet, the serving CI
+# gate (benchmarks/run.py --section serving) and the load-latency figure
+# (benchmarks/paper_figs.loadlat_sweep) all read these tables — the grid
+# used to be hard-coded separately in each.
+# ---------------------------------------------------------------------------
+
+ENGINE_POLICIES = (
+    ("fifo", "fifo", {}),
+    ("greedy", "greedy", {}),
+    ("asl", "asl", dict(default_window=0.02, max_window=10.0)),
+    ("asl-warm", "asl", dict(default_window=0.02, max_window=10.0,
+                             warm_start=True, mi_factor=0.5)),
+)
+DISPATCH_POLICIES = ("fair", "fast-only", "asl")
+# Offered load as a fraction of fleet capacity; shared with the
+# lock-level load-latency figure so both sweeps probe the same points.
+LOAD_FRACS = (0.2, 0.4, 0.6, 0.8, 0.9)
+# 4 fast replicas at 10 rps + 4 slow at 10/3 rps (service_s=0.1, 3x slow)
+DISPATCH_CAPACITY_RPS = 4 / 0.1 + 4 / (0.1 * 3.0)
+
+# Global duration scale: benchmarks/run.py --quick sets this < 1 so the
+# serving smoke gate fits in CI time (mirrors paper_figs.SIM_SCALE).
+SCALE = 1.0
+
+DB_SLO_TTFT = 0.6
 
 
-def db_serving(rate_rps=2.5, duration_s=150.0, slo_ttft=0.6):
+def db_serving(rate_rps=2.5, duration_s=150.0, slo_ttft=DB_SLO_TTFT):
     cost = CostModel(decode_step_s=2e-3, prefill_chunk_s=18e-3,
                      prefill_chunk=2048, max_batch=64)
     rows = []
-    for name, sched, kw in (
-            ("fifo", "fifo", {}),
-            ("greedy", "greedy", {}),
-            ("asl", "asl", dict(default_window=0.02, max_window=10.0)),
-            ("asl-warm", "asl", dict(default_window=0.02, max_window=10.0,
-                                     warm_start=True, mi_factor=0.5))):
+    for name, sched, kw in ENGINE_POLICIES:
         eng = ServingEngine(sched, cost, scheduler_kwargs=kw, seed=1)
-        poisson_workload(eng, rate_rps=rate_rps, duration_s=duration_s,
+        poisson_workload(eng, rate_rps=rate_rps,
+                         duration_s=duration_s * SCALE,
                          prompt_lens=[2048, 4096, 8192, 16384],
                          new_tokens=[32, 128, 256],
                          slo_ttft=slo_ttft, seed=2)
@@ -41,14 +66,45 @@ def db_serving(rate_rps=2.5, duration_s=150.0, slo_ttft=0.6):
     return rows
 
 
+def db_multiclass(rate_rps=2.5, duration_s=150.0):
+    """Fig 8c tenancy: a latency-critical and a best-effort class share
+    one engine; ASL keeps one AIMD window per class (epoch_id)."""
+    # No per-class ServiceSpec: engine replay derives all timing from
+    # the CostModel + prompt_len/new_tokens columns (trace.service_s is
+    # ignored on this path — see replay_workload).
+    mix = WorkloadMix((
+        ClientClass("latency-critical", weight=1.0, slo=0.4),
+        ClientClass("best-effort", weight=1.0, slo=4.0),
+    ))
+    cost = CostModel(decode_step_s=2e-3, prefill_chunk_s=18e-3,
+                     prefill_chunk=2048, max_batch=64)
+    rows = []
+    for name, sched, kw in ENGINE_POLICIES[:3]:        # fifo/greedy/asl
+        eng = ServingEngine(sched, cost, scheduler_kwargs=kw, seed=1)
+        multiclass_workload(eng, mix, rate_rps=rate_rps,
+                            duration_s=duration_s * SCALE,
+                            prompt_lens=[2048, 4096, 8192],
+                            new_tokens=[32, 128], seed=2)
+        per = metrics_by_class(eng, mix)
+        row = dict(name=f"db_multiclass/{name}", by_class=per)
+        for cls, m in per.items():
+            for k, v in m.items():
+                row[f"{cls}/{k}"] = v
+        rows.append(row)
+    return rows
+
+
 def dispatch_fleet():
     rows = []
-    for rate in (10.0, 20.0, 30.0, 40.0, 48.0):
-        for pol in ("fair", "fast-only", "asl"):
+    for frac in LOAD_FRACS:
+        rate = round(frac * DISPATCH_CAPACITY_RPS, 1)
+        for pol in DISPATCH_POLICIES:
             m = simulate_dispatch(pol, rate_rps=rate, service_s=0.1,
-                                  slo=0.5, duration_s=200.0, seed=3)
-            m["name"] = f"dispatch/{pol}/rate{rate:.0f}"
+                                  slo=0.5, duration_s=200.0 * SCALE,
+                                  seed=3)
+            m["name"] = f"dispatch/{pol}/load{frac:.2f}"
             m["rate_rps"] = rate
+            m["load_frac"] = frac
             rows.append(m)
     return rows
 
@@ -75,6 +131,7 @@ def straggler_training():
 
 ALL = {
     "db_serving": db_serving,
+    "db_multiclass": db_multiclass,
     "dispatch_fleet": dispatch_fleet,
     "straggler_training": straggler_training,
 }

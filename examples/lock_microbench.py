@@ -10,7 +10,9 @@ core P99 tracks the SLO line).
 import pathlib
 import sys
 
-sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(_ROOT / "src"))
+sys.path.insert(0, str(_ROOT))          # benchmarks.* (loadlat helper)
 
 import jax                                  # noqa: E402
 import numpy as np                          # noqa: E402
@@ -18,16 +20,16 @@ import numpy as np                          # noqa: E402
 from repro.core import simlock as sl        # noqa: E402
 
 
-def figure1():
+def figure1(ns=range(1, 9), sim_time_us=40_000.0):
     print("== Figure 1: scaling 1..8 threads (4 big + 4 little) ==")
     print(f"{'n':>2} {'MCS tput':>10} {'MCS p99':>9} {'TAS tput':>10} "
           f"{'TAS p99':>9}")
-    for n in range(1, 9):
+    for n in ns:
         big = tuple([1] * min(n, 4) + [0] * max(n - 4, 0))
         kw = dict(n_cores=n, big=big,
                   speed_cs=tuple(1.0 if b else 3.75 for b in big),
                   speed_nc=tuple(1.0 if b else 1.8 for b in big),
-                  sim_time_us=40_000.0)
+                  sim_time_us=sim_time_us)
         mcs_cfg = sl.SimConfig(policy="fifo", **kw)
         mcs = sl.summarize(mcs_cfg, sl.run(mcs_cfg, 1e9))
         tas_cfg = sl.SimConfig(policy="tas", w_big=0.15, **kw)
@@ -38,11 +40,11 @@ def figure1():
               f"{tas['cs_p99_all_us']:>8.1f}u")
 
 
-def figure8b():
+def figure8b(slos=(20., 40., 60., 80., 100., 150., 200.),
+             sim_time_us=50_000.0):
     print("\n== Figure 8b: LibASL SLO sweep (one jax.vmap) ==")
-    cfg = sl.SimConfig(policy="libasl", sim_time_us=50_000.0)
-    slos = [20., 40., 60., 80., 100., 150., 200.]
-    st = sl.sweep_slo(cfg, slos)
+    cfg = sl.SimConfig(policy="libasl", sim_time_us=sim_time_us)
+    st = sl.sweep_slo(cfg, list(slos))
     print(f"{'SLO us':>7} {'tput':>9} {'little p99':>11} {'big p99':>9}")
     for i, slo in enumerate(slos):
         s = sl.summarize(cfg, jax.tree.map(lambda x: x[i], st))
@@ -51,9 +53,35 @@ def figure8b():
               f"{s['ep_p99_big_us']:>8.1f}u")
 
 
-def main():
-    figure1()
-    figure8b()
+def loadlat(fracs=(0.4, 0.9, 3.0), sim_time_us=20_000.0):
+    print("\n== Load-latency: stochastic workload (repro.workloads) ==")
+    from benchmarks.paper_figs import _loadlat_rate
+    rates = [_loadlat_rate(f) for f in fracs]
+
+    def curve(policy, slo_us):
+        cfg = sl.SimConfig(policy=policy, wl=True, wl_process="poisson",
+                           wl_service="lognormal", wl_cv=1.0,
+                           sim_time_us=sim_time_us)
+        st, _ = sl.sweep(cfg, {"arrival_rate": rates}, slo_us=slo_us)
+        return [sl.summarize(cfg, jax.tree.map(lambda x, i=i: x[i], st))
+                for i in range(len(rates))]
+
+    mcs = curve("fifo", 1e9)
+    asl = curve("libasl", 200.0)
+    print(f"{'load':>5} {'MCS tput':>10} {'MCS p99':>9} "
+          f"{'ASL tput':>10} {'ASL p99':>9}")
+    for f, m, a in zip(fracs, mcs, asl):
+        print(f"{f:>5.1f} {m['throughput_cs_per_s']:>10.0f} "
+              f"{m['ep_p99_little_us']:>8.1f}u "
+              f"{a['throughput_cs_per_s']:>10.0f} "
+              f"{a['ep_p99_little_us']:>8.1f}u")
+
+
+def main(ns=range(1, 9), slos=(20., 40., 60., 80., 100., 150., 200.),
+         sim_time_us=40_000.0, fracs=(0.4, 0.9, 3.0)):
+    figure1(ns, sim_time_us)
+    figure8b(slos, sim_time_us)
+    loadlat(fracs, sim_time_us=sim_time_us / 2)
 
 
 if __name__ == "__main__":

@@ -18,28 +18,36 @@ from repro.configs import registry                      # noqa: E402
 from repro.train.trainer import Trainer, TrainerConfig  # noqa: E402
 
 
-def main():
+def main(total_steps=60, preempt_at=30, ckpt_every=10, global_batch=8,
+         seq_len=64, lr=3e-3, check_loss=True):
+    """Parameterized so the test suite can smoke-run it with tiny
+    arguments (tests/test_examples.py); defaults reproduce the demo."""
     cfg = registry.get_tiny("yi_6b")
     with tempfile.TemporaryDirectory() as d:
-        tcfg = TrainerConfig(total_steps=60, ckpt_every=10, ckpt_dir=d,
-                             lr=3e-3, global_batch=8, seq_len=64)
+        tcfg = TrainerConfig(total_steps=total_steps,
+                             ckpt_every=ckpt_every, ckpt_dir=d,
+                             lr=lr, global_batch=global_batch,
+                             seq_len=seq_len)
 
-        print("== phase 1: train 30 steps, then 'preempt' ==")
+        print(f"== phase 1: train {preempt_at} steps, then 'preempt' ==")
         t1 = Trainer(cfg, tcfg)
-        out1 = t1.run(max_steps=30)
+        out1 = t1.run(max_steps=preempt_at)
         print(f"   step={out1['step']} "
               f"loss {out1['history'][0]['loss']:.3f} -> "
               f"{out1['history'][-1]['loss']:.3f}")
 
         print("== phase 2: fresh process restores from checkpoint ==")
         t2 = Trainer(cfg, tcfg)
-        assert t2.ckpt.latest() == 30
+        assert t2.ckpt.latest() == preempt_at
         out2 = t2.run()
-        print(f"   resumed at 30, finished at step={out2['step']} "
+        print(f"   resumed at {preempt_at}, finished at "
+              f"step={out2['step']} "
               f"final loss {out2['history'][-1]['loss']:.3f}")
-        assert out2["step"] == 60
-        assert out2["history"][-1]["loss"] < out1["history"][0]["loss"]
+        assert out2["step"] == total_steps
+        if check_loss:
+            assert out2["history"][-1]["loss"] < out1["history"][0]["loss"]
         print("quickstart OK: loss decreased and restart was seamless")
+        return out2
 
 
 if __name__ == "__main__":

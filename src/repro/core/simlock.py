@@ -38,6 +38,12 @@ n=1..8 share one executable.  ``sweep(cfg, axes)`` runs one whole figure
 as a single ``lax.map``-batched call; the inner loop retires ``cfg.chunk``
 events per ``lax.scan`` chunk inside the outer ``while_loop`` to amortize
 dispatch.
+
+Stochastic workloads (``wl=True``; repro.workloads, docs/workloads.md)
+scale each epoch's think and service segments by counter-based draws —
+offered load (``arrival_rate``), service shape (``cv``/``mix``) and
+burstiness sweep as traced axes too, and the per-core ``slo_scale``
+table models multi-class tenants side by side.
 """
 
 from __future__ import annotations
@@ -53,6 +59,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.dist.hlo_analysis import executable_stats
+from repro.workloads import generators as wlg
 
 # Phases
 NONCRIT, STANDBY, QUEUED, HOLDER, SPIN = 0, 1, 2, 3, 4
@@ -102,6 +109,25 @@ class SimConfig:
     # Bench-6: blocking locks — FIFO handoff to a parked waiter pays a
     # wakeup latency; a standby grabbing a free lock (spinning) does not.
     wakeup_us: float = 0.0
+    # Stochastic workload model (repro.workloads.generators): per-epoch
+    # think (arrival) and service-time scaling.  ``wl`` is the single
+    # on/off jit-static bit (it gates whether the draws exist in the HLO
+    # at all); every other field below is traced via SimParams, so
+    # arrival_rate / cv / mix / burstiness sweep as batch axes.
+    wl: bool = False
+    wl_process: str = "poisson"   # ARRIVALS: closed|poisson|mmpp|diurnal
+    wl_service: str = "det"       # SERVICES: det|exp|lognormal|bimodal
+    wl_rate: float = 1.0          # offered load: mean think x= 1/rate
+    wl_cv: float = 1.0            # lognormal service cv
+    wl_mix: float = 0.0           # bimodal Get/Put long-mode probability
+    wl_mix_scale: float = 10.0    # bimodal long/short ratio
+    wl_burst: float = 1.0         # MMPP on/off rate ratio (1 = plain)
+    wl_burst_len: float = 8.0     # mean epochs per MMPP phase
+    wl_amp: float = 0.0           # diurnal ramp amplitude in [0,1)
+    wl_period_us: float = 0.0     # diurnal period (0 -> sim_time_us)
+    # Per-core SLO scale (multi-class tenancy; () -> all ones).  Rides
+    # traced in SimTables, so mixed-tenant cells share one executable.
+    slo_scale: tuple = ()
     # Events retired per lax.scan chunk inside the outer while_loop
     # (amortizes the loop-condition check; results are chunk-invariant —
     # the live-guard in _step retires partial tails as no-ops).  128
@@ -122,6 +148,7 @@ class SimTables(NamedTuple):
     nc_dur: jnp.ndarray    # i32[N,S] non-CS ticks per (core, segment)
     inter: jnp.ndarray     # i32[N] inter-epoch ticks per core
     seg_lock: jnp.ndarray  # i32[S] lock id per segment
+    slo_scale: jnp.ndarray  # f32[N] per-core SLO multiplier (multi-class)
 
 
 class SimParams(NamedTuple):
@@ -140,6 +167,17 @@ class SimParams(NamedTuple):
     # collapsed to ~0 must keep a regrowth floor, or zero becomes an
     # absorbing state (window only ever shrinks).
     unit0: jnp.ndarray       # f32 ticks
+    # Stochastic workload knobs (all traced; live ops only when cfg.wl)
+    wl_process: jnp.ndarray   # i32 ARRIVALS id
+    wl_service: jnp.ndarray   # i32 SERVICES id
+    wl_rate: jnp.ndarray      # f32 offered-load scale
+    wl_cv: jnp.ndarray        # f32 service cv
+    wl_mix: jnp.ndarray       # f32 bimodal long-mode probability
+    wl_mix_scale: jnp.ndarray  # f32 bimodal long/short ratio
+    wl_burst: jnp.ndarray     # f32 MMPP on/off rate ratio
+    wl_burst_len: jnp.ndarray  # f32 mean epochs per MMPP phase
+    wl_amp: jnp.ndarray       # f32 diurnal amplitude
+    wl_period: jnp.ndarray    # f32 diurnal period (ticks)
 
 
 class SimState(NamedTuple):
@@ -152,7 +190,9 @@ class SimState(NamedTuple):
     attempt_t: jnp.ndarray    # i32[N]
     window: jnp.ndarray       # f32[N] (ticks)
     unit: jnp.ndarray         # f32[N]
-    scale: jnp.ndarray        # f32[N] current epoch noncrit scale (Bench-3)
+    scale: jnp.ndarray        # f32[N] current epoch noncrit scale (Bench-3/wl)
+    svc_scale: jnp.ndarray    # f32[N] current epoch CS scale (wl service)
+    wl_on: jnp.ndarray        # i32[N] MMPP on/off phase bit (wl)
     q: jnp.ndarray            # i32[L,2,N] ring buffers (0=main/big, 1=little)
     q_head: jnp.ndarray       # i32[L,2]
     q_tail: jnp.ndarray       # i32[L,2]
@@ -180,12 +220,16 @@ def _canon(cfg: SimConfig) -> SimConfig:
         cfg, big=(0,) * n, speed_cs=(1.0,) * n, speed_nc=(1.0,) * n,
         seg_noncrit_us=(0.0,) * s, seg_cs_us=(0.0,) * s, seg_lock=(0,) * s,
         inter_epoch_us=0.0, w_big=1.0, prop_n=1, default_window_us=0.0,
-        # Only the on/off bit of the mix/wakeup features is static (it
-        # gates whether the RNG draw / handoff add exist in the HLO at
-        # all); the actual values are traced.
+        # Only the on/off bit of the mix/wakeup/workload features is
+        # static (it gates whether the RNG draw / handoff add exist in
+        # the HLO at all); the actual values are traced.
         long_epoch_prob=1.0 if cfg.long_epoch_prob > 0.0 else 0.0,
         long_epoch_scale=1.0,
-        wakeup_us=1.0 if cfg.wakeup_us > 0.0 else 0.0)
+        wakeup_us=1.0 if cfg.wakeup_us > 0.0 else 0.0,
+        wl=bool(cfg.wl), wl_process="poisson", wl_service="det",
+        wl_rate=1.0, wl_cv=1.0, wl_mix=0.0, wl_mix_scale=1.0,
+        wl_burst=1.0, wl_burst_len=1.0, wl_amp=0.0, wl_period_us=0.0,
+        slo_scale=())
 
 
 def build_tables(cfg: SimConfig) -> SimTables:
@@ -203,7 +247,12 @@ def build_tables(cfg: SimConfig) -> SimTables:
         inter=jnp.asarray(
             [_ticks(cfg.inter_epoch_us * cfg.speed_nc[c]) for c in range(n)],
             jnp.int32),
-        seg_lock=jnp.asarray(cfg.seg_lock, jnp.int32))
+        seg_lock=jnp.asarray(cfg.seg_lock, jnp.int32),
+        # Pad a short table with 1.0 (neutral): a short f32[k] table
+        # would be index-*clamped* inside jit, silently giving high
+        # cores the last class's SLO scale.
+        slo_scale=jnp.asarray(
+            (tuple(cfg.slo_scale) + (1.0,) * n)[:n], jnp.float32))
 
 
 def build_params(cfg: SimConfig, slo_us, seed=0, n_active=None) -> SimParams:
@@ -221,7 +270,19 @@ def build_params(cfg: SimConfig, slo_us, seed=0, n_active=None) -> SimParams:
         long_scale=jnp.float32(cfg.long_epoch_scale),
         wakeup=jnp.int32(_ticks(cfg.wakeup_us)),
         unit0=jnp.float32(_ticks(cfg.default_window_us)
-                          * (100.0 - cfg.pct) / 100.0))
+                          * (100.0 - cfg.pct) / 100.0),
+        wl_process=jnp.int32(wlg.ARRIVALS[cfg.wl_process]),
+        wl_service=jnp.int32(wlg.SERVICES[cfg.wl_service]),
+        wl_rate=jnp.float32(cfg.wl_rate),
+        wl_cv=jnp.float32(cfg.wl_cv),
+        wl_mix=jnp.float32(cfg.wl_mix),
+        wl_mix_scale=jnp.float32(cfg.wl_mix_scale),
+        wl_burst=jnp.float32(cfg.wl_burst),
+        wl_burst_len=jnp.float32(cfg.wl_burst_len),
+        wl_amp=jnp.float32(cfg.wl_amp),
+        wl_period=jnp.float32(_ticks(
+            cfg.wl_period_us if cfg.wl_period_us > 0.0
+            else cfg.sim_time_us)))
 
 
 def _default_windows(cfg: SimConfig) -> np.ndarray:
@@ -235,11 +296,31 @@ def _init_state(cfg: SimConfig, tb: SimTables, pm: SimParams,
     # Stagger initial arrivals slightly so ties don't all collapse to core 0.
     stagger = jnp.arange(n, dtype=jnp.int32)
     windows0 = jnp.asarray(windows0, jnp.float32)
+    if cfg.wl:
+        # Epoch-0 workload draws — counter-based (pure in (seed, core, 0)),
+        # so padded / batched / sharded runs see identical values.
+        cores = jnp.arange(n, dtype=jnp.int32)
+        u_t = jax.vmap(lambda c: wlg.epoch_think_u(pm.seed, c, 0))(cores)
+        u_s, z_s = jax.vmap(
+            lambda c: wlg.epoch_service_uz(pm.seed, c, 0))(cores)
+        u_p = jax.vmap(lambda c: wlg.epoch_phase_u(pm.seed, c, 0))(cores)
+        wl_on0 = (u_p < 0.5).astype(jnp.int32)
+        scale0 = wlg.think_gap(u_t, pm.wl_process, pm.wl_rate, wl_on0,
+                               pm.wl_burst, 0.0, pm.wl_amp)
+        svc0 = wlg.service_unit(u_s, z_s, pm.wl_service, pm.wl_cv,
+                                pm.wl_mix, pm.wl_mix_scale)
+        nc0 = (tb.nc_dur[:, 0].astype(jnp.float32)
+               * scale0).astype(jnp.int32)
+    else:
+        wl_on0 = jnp.zeros(n, jnp.int32)
+        scale0 = jnp.ones(n, jnp.float32)
+        svc0 = jnp.ones(n, jnp.float32)
+        nc0 = tb.nc_dur[:, 0]
     return SimState(
         t=jnp.int32(0),
         key=jax.random.PRNGKey(pm.seed),
         phase=jnp.zeros(n, jnp.int32),
-        t_ready=jnp.where(active, tb.nc_dur[:, 0] + stagger, INF),
+        t_ready=jnp.where(active, nc0 + stagger, INF),
         seg=jnp.zeros(n, jnp.int32),
         epoch_start=jnp.zeros(n, jnp.int32),
         attempt_t=jnp.zeros(n, jnp.int32),
@@ -250,7 +331,9 @@ def _init_state(cfg: SimConfig, tb: SimTables, pm: SimParams,
         q_tail=jnp.zeros((l, 2), jnp.int32),
         holder=jnp.full(l, -1, jnp.int32),
         prop_ctr=jnp.zeros(l, jnp.int32),
-        scale=jnp.ones(n, jnp.float32),
+        scale=scale0,
+        svc_scale=svc0,
+        wl_on=wl_on0,
         ep_lat=jnp.zeros((n, cap), jnp.float32),
         ep_cnt=jnp.zeros(n, jnp.int32),
         cs_lat=jnp.zeros((n, cap), jnp.float32),
@@ -330,6 +413,12 @@ def _grant(st: SimState, cfg: SimConfig, tb: SimTables, pm: SimParams,
     c_safe = jnp.maximum(c, 0)
     l = tb.seg_lock[st.seg[c_safe]]
     dur = tb.cs_dur[c_safe, st.seg[c_safe]]
+    if cfg.wl:
+        # Current-epoch service multiplier (drawn at the last epoch end);
+        # floor at 1 tick so a heavy-tailed draw can't create a 0-length
+        # critical section.
+        dur = jnp.maximum((dur.astype(jnp.float32)
+                           * st.svc_scale[c_safe]).astype(jnp.int32), 1)
     if wakeup and cfg.wakeup_us > 0.0:
         dur = dur + pm.wakeup
     holder = st.holder.at[l].set(jnp.where(cond, c_safe, st.holder[l]))
@@ -503,7 +592,9 @@ def _handle_release(st: SimState, cfg: SimConfig, tb: SimTables,
 
     if cfg.policy == "libasl":
         adjust = jnp.logical_and(jnp.logical_and(last, tb.big[c] == 0), cond)
-        violated = ep_latency > pm.slo
+        # Per-core SLO scale: multi-class tenants (clients.amp_config)
+        # each track their own SLO; the default table is all-ones.
+        violated = ep_latency > pm.slo * tb.slo_scale[c]
         w = jnp.where(violated, st.window[c] * 0.5, st.window[c])
         u = jnp.where(violated, w * (100.0 - cfg.pct) / 100.0, st.unit[c])
         w = jnp.clip(w + u, 0.0, _ticks(cfg.max_window_us))
@@ -511,19 +602,44 @@ def _handle_release(st: SimState, cfg: SimConfig, tb: SimTables,
             window=st.window.at[c].set(jnp.where(adjust, w, st.window[c])),
             unit=st.unit.at[c].set(jnp.where(adjust, u, st.unit[c])))
 
-    # Bench-3: sample the next epoch's noncrit scale (heterogeneous mix).
-    # Statically gated on the canonicalized on/off bit: the per-release RNG
-    # draw only exists in the HLO when the mix feature is enabled; the
-    # probability/scale themselves are traced (sweepable).
+    # Sample the next epoch's workload: the Bench-3 long-epoch mix and/or
+    # the repro.workloads stochastic model.  Both are statically gated on
+    # their canonicalized on/off bits — the RNG draws only exist in the
+    # HLO when the feature is enabled; all values are traced (sweepable).
+    new_scale = None
     if cfg.long_epoch_prob > 0.0:
         key, sub = jax.random.split(st.key)
         u = jax.random.uniform(sub)
         new_scale = jnp.where(u < pm.long_prob, pm.long_scale,
                               jnp.float32(1.0))
+        st = st._replace(key=jnp.where(cond, key, st.key))
+    if cfg.wl:
+        # Counter-based draws (repro.workloads.generators): pure in
+        # (seed, core, epoch-index), so batching/sharding/event order
+        # cannot perturb the workload, and the host can reconstruct it
+        # (generators.epoch_scale_tables).  st.ep_cnt[c] was already
+        # bumped above, so it is the *next* epoch's index.
+        ep = st.ep_cnt[c]
+        u_t = wlg.epoch_think_u(pm.seed, c, ep)
+        u_s, z_s = wlg.epoch_service_uz(pm.seed, c, ep)
+        u_p = wlg.epoch_phase_u(pm.seed, c, ep)
+        on = wlg.phase_flip(u_p, st.wl_on[c], pm.wl_burst_len)
+        phase01 = jnp.mod(t.astype(jnp.float32)
+                          / jnp.maximum(pm.wl_period, 1.0), 1.0)
+        think = wlg.think_gap(u_t, pm.wl_process, pm.wl_rate, on,
+                              pm.wl_burst, phase01, pm.wl_amp)
+        svc = wlg.service_unit(u_s, z_s, pm.wl_service, pm.wl_cv,
+                               pm.wl_mix, pm.wl_mix_scale)
+        new_scale = think if new_scale is None else new_scale * think
+        upd = jnp.logical_and(last, cond)
+        st = st._replace(
+            wl_on=st.wl_on.at[c].set(jnp.where(upd, on, st.wl_on[c])),
+            svc_scale=st.svc_scale.at[c].set(
+                jnp.where(upd, svc, st.svc_scale[c])))
+    if new_scale is not None:
         scale_c = jnp.where(jnp.logical_and(last, cond), new_scale,
                             st.scale[c])
-        st = st._replace(key=jnp.where(cond, key, st.key),
-                         scale=st.scale.at[c].set(scale_c))
+        st = st._replace(scale=st.scale.at[c].set(scale_c))
 
         def _sc(d):
             return (d.astype(jnp.float32) * scale_c).astype(jnp.int32)
@@ -733,10 +849,20 @@ _PARAM_AXES = {
     "long_epoch_prob": "long_prob",
     "long_epoch_scale": "long_scale",
     "wakeup_us": "wakeup",
+    # Stochastic workload axes (repro.workloads; require cfg.wl — sweep()
+    # flips the static bit on automatically when one is present)
+    "arrival_rate": "wl_rate",
+    "cv": "wl_cv",
+    "mix": "wl_mix",
+    "mix_scale": "wl_mix_scale",
+    "burstiness": "wl_burst",
+    "burst_len": "wl_burst_len",
 }
+_WL_AXES = ("arrival_rate", "cv", "mix", "mix_scale", "burstiness",
+            "burst_len")
 # axis name -> SimConfig field rebuilt through build_tables per cell
 _TABLE_AXES = ("seg_noncrit_us", "seg_cs_us", "seg_lock", "inter_epoch_us",
-               "big", "speed_cs", "speed_nc")
+               "big", "speed_cs", "speed_nc", "slo_scale")
 SWEEPABLE = tuple(_PARAM_AXES) + _TABLE_AXES + ("window0_us",)
 
 
@@ -754,6 +880,10 @@ def _cell_params(cfg: SimConfig, cell: dict, slo_us, seed) -> SimParams:
         pm = pm._replace(long_scale=jnp.float32(cell["long_epoch_scale"]))
     if "wakeup_us" in cell:
         pm = pm._replace(wakeup=jnp.int32(_ticks(cell["wakeup_us"])))
+    for axis in _WL_AXES:
+        if axis in cell:
+            pm = pm._replace(
+                **{_PARAM_AXES[axis]: jnp.float32(cell[axis])})
     if "window0_us" in cell:
         # A swept initial window plays the role of default_window_us (the
         # seed's LibASL-MAX cells set both), so the unit floor follows it.
@@ -797,6 +927,8 @@ def sweep(cfg: SimConfig, axes: dict, *, slo_us=1e9, seed=0,
     for gate in ("long_epoch_prob", "wakeup_us"):
         if gate in axes and max(axes[gate]) > 0.0:
             cfg = dataclasses.replace(cfg, **{gate: max(axes[gate])})
+    if not cfg.wl and any(a in axes for a in _WL_AXES):
+        cfg = dataclasses.replace(cfg, wl=True)
     names = list(axes)
     vals = [list(axes[k]) for k in names]
     if product:

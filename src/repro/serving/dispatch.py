@@ -27,6 +27,10 @@ import heapq
 import numpy as np
 
 from repro.core.aimd import AIMDWindow
+from repro.workloads import traces as wl_traces
+from repro.workloads.generators import (LEGACY_LOGNORMAL_CV,
+                                        LEGACY_LOGNORMAL_MEAN, ArrivalSpec,
+                                        ServiceSpec)
 
 
 @dataclasses.dataclass
@@ -47,24 +51,34 @@ def spill_index(queue, clock):
 def simulate_dispatch(policy: str, *, n_fast=4, n_slow=4, slow_factor=3.0,
                       rate_rps=30.0, service_s=0.1, duration_s=300.0,
                       slo=None, pct=99.0, seed=0,
-                      default_window=0.02, max_window=30.0):
+                      default_window=0.02, max_window=30.0,
+                      arrival: ArrivalSpec = None,
+                      service: ServiceSpec = None, trace=None):
     """Event-driven M/G/k with heterogeneous servers; returns metrics.
 
     ASL: a queued request may wait (stand by) for a fast replica until its
     window expires, then accepts any replica.  Feedback: AIMD on completed
     request latency vs SLO (one shared epoch class).
+
+    The workload comes from ``repro.workloads``: pass a recorded
+    ``trace`` to replay it exactly, or ``arrival``/``service`` specs to
+    generate one (default: open-loop Poisson arrivals + the legacy
+    lognormal service shape) — deterministic per ``seed``.
     """
-    rng = np.random.default_rng(seed)
+    if trace is None:
+        trace = wl_traces.generate(
+            arrival or ArrivalSpec("poisson", rate_rps),
+            service or ServiceSpec("lognormal",
+                                   mean=service_s * LEGACY_LOGNORMAL_MEAN,
+                                   cv=LEGACY_LOGNORMAL_CV),
+            duration_s, seed)
     fast = [Replica(1.0) for _ in range(n_fast)]
     slow = [Replica(slow_factor) for _ in range(n_slow)]
     win = AIMDWindow(window=default_window,
                      unit=default_window * (100 - pct) / 100, pct=pct,
                      max_window=max_window)
-    t = 0.0
-    arrivals = []
-    while t < duration_s:
-        t += rng.exponential(1.0 / rate_rps)
-        arrivals.append((t, rng.lognormal(np.log(service_s), 0.3)))
+    arrivals = list(zip(trace.arrival_t.tolist(),
+                        trace.service_s.tolist()))
 
     lat = []
     served_fast = served_slow = 0

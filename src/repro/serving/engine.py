@@ -75,7 +75,9 @@ class ServingEngine:
         self.itl_samples: list[float] = []    # inter-token gaps (decode)
         self._last_decode_t: float | None = None
         self._rid = itertools.count()
-        self._rng = np.random.default_rng(seed)
+        # ``seed`` is kept for API compatibility; all workload randomness
+        # now lives in repro.workloads (counter-based, engine-independent).
+        del seed
 
     # ------------------------------------------------------------------
     def submit(self, prompt_len: int, max_new_tokens: int, slo_ttft: float,
@@ -183,26 +185,103 @@ class ServingEngine:
         }
 
 
-def poisson_workload(engine: ServingEngine, *, rate_rps: float,
-                     duration_s: float, prompt_lens, new_tokens,
-                     slo_ttft: float, seed: int = 0):
-    """Drive the engine with a Poisson arrival process (simulated clock)."""
-    rng = np.random.default_rng(seed)
-    t = 0.0
-    arrivals = []
-    while t < duration_s:
-        t += rng.exponential(1.0 / rate_rps)
-        arrivals.append(t)
+def replay_workload(engine: ServingEngine, trace, *, slo_ttft: float = None,
+                    duration_s: float = None):
+    """Drive the engine from a ``repro.workloads.traces.Trace`` —
+    deterministic: the same trace always produces the same run.
+
+    Request shape comes from the trace's ``prompt_len``/``new_tokens``
+    columns; class ids become scheduler ``epoch_id``s and per-class SLOs
+    (``trace.slo``) the TTFT SLOs (``slo_ttft`` overrides for
+    single-class traces).  ``trace.service_s`` is NOT consumed here —
+    engine timing comes from the CostModel and the shape columns (the
+    dispatch sim is the consumer that replays service times)."""
+    if duration_s is None:
+        duration_s = float(trace.meta.get(
+            "duration", trace.arrival_t[-1] if len(trace) else 0.0))
+    pl = trace.cols["prompt_len"]
+    nt = trace.cols["new_tokens"]
+    slos = trace.slo
     ai = 0
+    n = len(trace)
     while engine.clock < duration_s:
-        while ai < len(arrivals) and arrivals[ai] <= engine.clock:
-            pl = int(rng.choice(np.atleast_1d(prompt_lens)))
-            nt = int(rng.choice(np.atleast_1d(new_tokens)))
-            engine.submit(pl, nt, slo_ttft, arrival_t=arrivals[ai])
+        while ai < n and trace.arrival_t[ai] <= engine.clock:
+            k = int(trace.klass[ai])
+            slo = slo_ttft if slo_ttft is not None else (
+                float(slos[k]) if slos is not None else float("inf"))
+            engine.submit(int(pl[ai]), int(nt[ai]), slo, epoch_id=k,
+                          arrival_t=float(trace.arrival_t[ai]))
             ai += 1
-        if ai < len(arrivals) and not engine.sched.pending() \
-                and not engine.running:
-            engine.clock = arrivals[ai]     # fast-forward idle gaps
+        if ai < n and not engine.sched.pending() and not engine.running:
+            engine.clock = float(trace.arrival_t[ai])  # skip idle gaps
             continue
         engine.step()
+    return engine
+
+
+def poisson_workload(engine: ServingEngine, *, rate_rps: float,
+                     duration_s: float, prompt_lens, new_tokens,
+                     slo_ttft: float, seed: int = 0, trace=None):
+    """Drive the engine with an open-loop Poisson arrival process.
+
+    The workload is materialized as a ``repro.workloads`` trace
+    (counter-based draws — deterministic per seed) and replayed; pass
+    ``trace`` to replay a recorded one instead."""
+    from repro.workloads import traces as wl_traces
+    from repro.workloads.generators import ArrivalSpec, ServiceSpec
+    if trace is None:
+        trace = wl_traces.generate(
+            ArrivalSpec("poisson", rate_rps), ServiceSpec(), duration_s,
+            seed, cols=wl_traces.request_columns(prompt_lens, new_tokens))
+    return replay_workload(engine, trace, slo_ttft=slo_ttft,
+                           duration_s=duration_s)
+
+
+def closed_loop_workload(engine: ServingEngine, *, n_clients: int,
+                         think_s: float, duration_s: float, prompt_lens,
+                         new_tokens, slo_ttft: float, seed: int = 0):
+    """Closed-loop driver: each of ``n_clients`` resubmits one request an
+    Exp(``think_s``) think time after its previous one *finishes* (load
+    self-throttles with congestion, unlike the open-loop Poisson driver).
+    Think draws are counter-based per (client, request index)."""
+    from repro.workloads.generators import choice, client_think_gaps
+    cap = max(int(duration_s / max(think_s, 1e-6) * 2) + 16, 64)
+    gaps = [client_think_gaps(seed, c, cap) * think_s
+            for c in range(n_clients)]
+    pls = choice(prompt_lens, n_clients * cap, seed)
+    nts = choice(new_tokens, n_clients * cap, seed + 1)
+    next_t = [float(gaps[c][0]) for c in range(n_clients)]
+    n_sub = [1] * n_clients                   # next gap index per client
+    subs = [0] * n_clients                    # submissions per client
+    inflight: dict[int, int] = {}             # rid -> client
+    done_seen = 0
+    while engine.clock < duration_s:
+        for c in range(n_clients):
+            if next_t[c] <= engine.clock:
+                # Shape draws are indexed per (client, submission) — a
+                # global counter would make the workload depend on
+                # completion interleaving (i.e. on the policy under
+                # test), breaking the identical-workload discipline.
+                i = c * cap + subs[c]
+                r = engine.submit(int(pls[i % len(pls)]),
+                                  int(nts[i % len(nts)]), slo_ttft,
+                                  arrival_t=next_t[c])
+                subs[c] += 1
+                inflight[r.rid] = c
+                next_t[c] = float("inf")
+        if not engine.sched.pending() and not engine.running:
+            t_min = min((t for t in next_t if t < float("inf")),
+                        default=None)
+            if t_min is None or t_min >= duration_s:
+                break
+            engine.clock = max(engine.clock, t_min)
+            continue
+        engine.step()
+        while done_seen < len(engine.done):
+            r = engine.done[done_seen]
+            done_seen += 1
+            c = inflight.pop(r.rid, None)
+            if c is not None and n_sub[c] < cap:
+                next_t[c] = r.finish_t + float(gaps[c][n_sub[c]])
+                n_sub[c] += 1
     return engine

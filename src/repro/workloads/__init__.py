@@ -1,0 +1,36 @@
+"""Batched stochastic workload generation for the lock + fleet simulators.
+
+The paper's headline results come from real databases under *application
+workloads*; this package is the reproduction's workload model — one layer
+that every simulator consumes, so "bursty vs steady" or "mixed tenants"
+is a parameter, not a fork of the simulator:
+
+* :mod:`repro.workloads.generators` — arrival processes (closed-loop,
+  open-loop Poisson, MMPP bursty on-off, diurnal ramp) and service-time
+  distributions (deterministic, exponential, lognormal, bimodal Get/Put
+  mix) as pure-jnp, vmap-safe samplers under a **counter-based RNG
+  discipline**: every draw is a pure function of
+  ``(seed, stream, *indices)``, so device-side sweeps, host-side sims and
+  recorded traces all see bit-identical workloads.
+* :mod:`repro.workloads.clients` — multi-class clients: per-class SLOs,
+  mix ratios and big/little core affinity (paper Fig 8c tenancy).
+* :mod:`repro.workloads.traces` — a small npz trace format with a
+  recorder and a deterministic replayer.
+
+Consumers: ``repro.core.simlock`` (workload axes as traced sweep
+dimensions), ``repro.serving.dispatch`` / ``repro.serving.engine`` (host
+arrivals + services), ``benchmarks/paper_figs.py`` (the load-latency
+figure).  See docs/workloads.md.
+"""
+
+from repro.workloads.generators import (ARRIVALS, SERVICES, ArrivalSpec,
+                                        ServiceSpec, arrival_times,
+                                        service_times)
+from repro.workloads.clients import ClientClass, WorkloadMix
+from repro.workloads.traces import Trace
+
+__all__ = [
+    "ARRIVALS", "SERVICES", "ArrivalSpec", "ServiceSpec",
+    "arrival_times", "service_times",
+    "ClientClass", "WorkloadMix", "Trace",
+]

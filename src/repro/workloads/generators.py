@@ -1,0 +1,368 @@
+"""Stochastic workload generators — counter-based, pure-jnp, vmap-safe.
+
+Two layers share one set of samplers:
+
+* **Scalar unit samplers** (``think_gap``, ``service_unit``, ...): pure
+  functions of uniforms/normals and *traced* distribution parameters,
+  combined branchlessly over the distribution id — so the discrete-event
+  simulator (``repro.core.simlock``) can sweep ``arrival_rate`` / ``cv``
+  / ``mix`` / ``burstiness`` as traced batch axes inside ONE compiled
+  executable per policy.
+* **Host array generators** (``arrival_times``, ``service_times``):
+  vectorized draws for the host-side serving sims and the trace recorder.
+
+RNG discipline (the load-bearing invariant): every uniform/normal is a
+pure function of ``(seed, stream, *indices)`` via ``jax.random.fold_in``
+chains — there is **no sequential RNG state**.  Draw ``i`` has the same
+value whether it is produced on device inside a vmapped sweep lane, on
+the host by the trace recorder, or re-produced by a replayer; batching,
+sharding and event interleaving cannot perturb the workload.  Streams
+(``STREAM_*``) keep arrival, service, phase and class draws independent.
+
+All mean-1 "unit" samplers scale an externally-calibrated mean, so
+changing the *shape* of a distribution (cv, mix) never changes its mean.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Arrival processes.  "closed" = closed-loop deterministic think time
+# (rate = 1/think); "poisson" = open-loop exponential gaps; "mmpp" =
+# 2-state Markov-modulated Poisson (bursty on-off); "diurnal" = Poisson
+# with a sinusoidal rate ramp.
+ARRIVALS = {"closed": 0, "poisson": 1, "mmpp": 2, "diurnal": 3}
+# Service-time distributions.  "bimodal" models a Get/Put mix: a short
+# mode and a ``mix_scale``x longer mode with probability ``mix``.
+SERVICES = {"det": 0, "exp": 1, "lognormal": 2, "bimodal": 3}
+
+# Independent draw streams (fold_in'd into the seed).
+STREAM_THINK = 0x7781
+STREAM_SERVICE = 0x7782
+STREAM_PHASE = 0x7783
+STREAM_CLASS = 0x7784
+STREAM_COLS = 0x7785
+
+
+# --------------------------------------------------------------------------
+# Counter-based keys and draws
+# --------------------------------------------------------------------------
+
+def stream_key(seed, stream: int):
+    """Base key of one draw stream: fold_in(PRNGKey(seed), stream)."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), stream)
+
+
+def counter_key(key, *indices):
+    """Fold traced indices into a stream key (a pure counter, no state)."""
+    for ix in indices:
+        key = jax.random.fold_in(key, ix)
+    return key
+
+
+def counter_uniform(key, *indices):
+    """U[0,1) as a pure function of (stream key, indices)."""
+    return jax.random.uniform(counter_key(key, *indices))
+
+
+def counter_normal(key, *indices):
+    return jax.random.normal(counter_key(key, *indices))
+
+
+@partial(jax.jit, static_argnums=(1, 2))
+def _block(key, n: int, kind: str):
+    ix = jnp.arange(n, dtype=jnp.int32)
+    if kind == "normal":
+        return jax.vmap(lambda i: counter_normal(key, i))(ix)
+    return jax.vmap(lambda i: counter_uniform(key, i))(ix)
+
+
+def _pad_pow2(n: int) -> int:
+    return 1 << max(6, int(n - 1).bit_length())
+
+
+def uniform_block(seed, stream: int, n: int) -> np.ndarray:
+    """Host-side block of counter-based uniforms: element ``i`` is
+    ``counter_uniform(stream_key(seed, stream), i)`` — independent of
+    ``n`` (the block is drawn at the next power of two and sliced), so
+    growing a trace never perturbs its prefix."""
+    return np.asarray(_block(stream_key(seed, stream), _pad_pow2(n),
+                             "uniform"))[:n].astype(np.float64)
+
+
+def normal_block(seed, stream: int, n: int) -> np.ndarray:
+    return np.asarray(_block(stream_key(seed, stream), _pad_pow2(n),
+                             "normal"))[:n].astype(np.float64)
+
+
+# --------------------------------------------------------------------------
+# Unit samplers (mean 1, scalar or vectorized; jnp and numpy agree)
+# --------------------------------------------------------------------------
+
+def exp_unit(u):
+    """Exp(1) from a uniform (inverse CDF; safe at u=1-eps)."""
+    return -jnp.log1p(-u)
+
+
+def lognormal_unit(z, cv):
+    """Mean-1 lognormal with coefficient of variation ``cv`` from a
+    standard normal ``z`` (sigma^2 = ln(1+cv^2), mu = -sigma^2/2)."""
+    s2 = jnp.log1p(jnp.square(cv))
+    return jnp.exp(jnp.sqrt(s2) * z - 0.5 * s2)
+
+
+def bimodal_unit(u, mix, mix_scale):
+    """Mean-1 two-point Get/Put mix: with probability ``mix`` the long
+    mode (``mix_scale`` x the short one), else the short mode."""
+    short = 1.0 / ((1.0 - mix) + mix * mix_scale)
+    return jnp.where(u < mix, short * mix_scale, short)
+
+
+def service_unit(u, z, dist, cv, mix, mix_scale):
+    """Mean-1 service multiplier, branchless over the SERVICES id
+    (``dist`` may be traced — all four samplers are cheap scalar math)."""
+    out = jnp.float32(1.0)                                   # det
+    out = jnp.where(dist == SERVICES["exp"], exp_unit(u), out)
+    out = jnp.where(dist == SERVICES["lognormal"],
+                    lognormal_unit(z, cv), out)
+    out = jnp.where(dist == SERVICES["bimodal"],
+                    bimodal_unit(u, mix, mix_scale), out)
+    return out
+
+
+def mmpp_rates(rate, burstiness):
+    """On/off rates of the 2-state MMPP with long-run mean ``rate``.
+    Phase residence is counted in *draws* (symmetric flip probability),
+    so the off phase occupies proportionally more wall time and the
+    time-average rate is the HARMONIC mean of the two:
+    on = ``burstiness`` x off, 2/(1/on + 1/off) = rate."""
+    r_off = rate * (1.0 + burstiness) / (2.0 * burstiness)
+    return burstiness * r_off, r_off
+
+
+def phase_flip(u, on, burst_len):
+    """One MMPP phase step: flip with probability 1/burst_len (mean
+    phase residence = ``burst_len`` draws).  ``on`` is i32 0/1."""
+    flip = u < 1.0 / jnp.maximum(burst_len, 1.0)
+    return jnp.where(flip, 1 - on, on)
+
+
+def diurnal_rate(rate, amp, phase01):
+    """Sinusoidal rate ramp: rate * (1 + amp*sin(2*pi*phase01)),
+    floored at 5% of the mean so the gap stays finite."""
+    mod = 1.0 + amp * jnp.sin(2.0 * jnp.pi * phase01)
+    return jnp.maximum(rate * mod, 0.05 * rate)
+
+
+def think_gap(u, process, rate, on, burstiness, phase01, amp):
+    """One inter-arrival / think gap (mean 1/rate), branchless over the
+    ARRIVALS id.  ``on`` is the MMPP phase bit; ``phase01`` the diurnal
+    cycle position in [0,1)."""
+    e1 = exp_unit(u)
+    gap = 1.0 / rate                                         # closed
+    gap = jnp.where(process == ARRIVALS["poisson"], e1 / rate, gap)
+    r_on, r_off = mmpp_rates(rate, burstiness)
+    gap = jnp.where(process == ARRIVALS["mmpp"],
+                    e1 / jnp.where(on == 1, r_on, r_off), gap)
+    gap = jnp.where(process == ARRIVALS["diurnal"],
+                    e1 / diurnal_rate(rate, amp, phase01), gap)
+    return gap
+
+
+def phase_bits(seed, n, burst_len, *, core=None, stream=STREAM_PHASE):
+    """The MMPP phase sequence for draws 0..n-1 as a host array.  Flip
+    ``i`` is counter-based, so the stateful on/off walk is a cumulative
+    XOR — the host can reconstruct exactly what a device-side lane (or a
+    different host sim) saw.  ``core`` namespaces per-client streams."""
+    if n == 0:
+        return np.zeros(0, np.int32)
+    key = stream_key(seed, stream)
+    if core is not None:
+        key = counter_key(key, core)
+    u = np.asarray(_block(key, _pad_pow2(n), "uniform"))[:n]
+    init_on = (u[0] < 0.5).astype(np.int32)
+    flips = (u < 1.0 / max(float(burst_len), 1.0)).astype(np.int32)
+    flips[0] = 0                       # draw 0 sets the initial phase
+    return (init_on + np.cumsum(flips)) % 2
+
+
+# --------------------------------------------------------------------------
+# Per-(core, epoch) draws — the contract between the device-side lock
+# simulator and host-side reconstruction.  simlock calls the scalar forms
+# per event; epoch_scale_tables re-derives the identical values on the
+# host (pure counters: no event ordering, batching or sharding involved).
+# --------------------------------------------------------------------------
+
+def epoch_think_u(seed, core, epoch):
+    return counter_uniform(stream_key(seed, STREAM_THINK), core, epoch)
+
+
+def epoch_service_uz(seed, core, epoch):
+    u = counter_uniform(stream_key(seed, STREAM_SERVICE), core, epoch)
+    z = counter_normal(stream_key(seed, STREAM_SERVICE ^ 0x40000),
+                       core, epoch)
+    return u, z
+
+
+def epoch_phase_u(seed, core, epoch):
+    return counter_uniform(stream_key(seed, STREAM_PHASE), core, epoch)
+
+
+def epoch_scale_tables(seed, n_cores: int, n_epochs: int, *, process,
+                       rate, cv=1.0, mix=0.0, mix_scale=10.0,
+                       burstiness=1.0, burst_len=8.0, service="det"):
+    """Host reconstruction of the simulator's per-epoch workload draws.
+
+    Returns ``(think, svc)`` — f64[n_cores, n_epochs] think-gap and
+    service-unit multipliers, bit-identical to what a ``wl=True``
+    ``simlock`` run with the same traced params applies at each core's
+    epoch ``e`` (epoch 0 = the initial draw).  The diurnal ramp is the
+    one process this cannot reproduce (its rate depends on sim *time*,
+    not the epoch counter) — requesting it raises."""
+    if process == "diurnal":
+        raise ValueError("diurnal draws depend on simulated time; only "
+                         "counter-pure processes can be reconstructed")
+    pid, sid = ARRIVALS[process], SERVICES[service]
+    cores = jnp.arange(n_cores, dtype=jnp.int32)
+    epochs = jnp.arange(n_epochs, dtype=jnp.int32)
+
+    def per_core(c):
+        u_t = jax.vmap(lambda e: epoch_think_u(seed, c, e))(epochs)
+        u_s, z_s = jax.vmap(lambda e: epoch_service_uz(seed, c, e))(epochs)
+        return u_t, u_s, z_s
+
+    u_t, u_s, z_s = jax.vmap(per_core)(cores)
+    on = np.stack([phase_bits(seed, n_epochs, burst_len, core=int(c))
+                   for c in range(n_cores)]) if n_epochs else \
+        np.zeros((n_cores, 0), np.int32)
+    think = think_gap(jnp.asarray(u_t), pid, rate, jnp.asarray(on),
+                      burstiness, 0.0, 0.0)
+    svc = service_unit(jnp.asarray(u_s), jnp.asarray(z_s), sid, cv, mix,
+                       mix_scale)
+    return (np.asarray(think, np.float64), np.asarray(svc, np.float64))
+
+
+# --------------------------------------------------------------------------
+# Host-level specs + array generators (the serving sims / trace recorder)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalSpec:
+    """An arrival process in host units (events per second)."""
+
+    process: str = "poisson"
+    rate: float = 1.0             # mean arrivals/sec
+    burstiness: float = 1.0       # MMPP on/off rate ratio (1 = plain)
+    burst_len: float = 8.0        # mean draws per MMPP phase
+    amp: float = 0.0              # diurnal amplitude in [0,1)
+    period: float = 0.0           # diurnal period (sec); 0 = flat
+
+    def __post_init__(self):
+        if self.process not in ARRIVALS:
+            raise ValueError(f"unknown arrival process {self.process!r}; "
+                             f"one of {sorted(ARRIVALS)}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceSpec:
+    """A service-time distribution in host units (seconds)."""
+
+    dist: str = "det"
+    mean: float = 1.0
+    cv: float = 1.0               # lognormal coefficient of variation
+    mix: float = 0.0              # bimodal: P(long mode)
+    mix_scale: float = 10.0       # bimodal: long/short ratio
+
+    def __post_init__(self):
+        if self.dist not in SERVICES:
+            raise ValueError(f"unknown service dist {self.dist!r}; "
+                             f"one of {sorted(SERVICES)}")
+
+
+# Shape of the legacy ``rng.lognormal(log(m), 0.3)`` service draw the
+# dispatch sim used before this package existed: cv = sqrt(exp(0.09)-1),
+# and its *mean* was m * exp(0.045) (m was the median) — ServiceSpec is
+# mean-parameterized, so the legacy calibration needs the inflation too.
+LEGACY_LOGNORMAL_CV = float(np.sqrt(np.expm1(0.3 ** 2)))
+LEGACY_LOGNORMAL_MEAN = float(np.exp(0.5 * 0.3 ** 2))
+
+
+def arrival_times(spec: ArrivalSpec, duration: float, seed: int,
+                  *, stream: int = STREAM_THINK) -> np.ndarray:
+    """Arrival times in [0, duration) — deterministic per (spec, seed).
+
+    Gap ``i`` uses counter draw ``i`` of ``stream``; the MMPP phase walk
+    is the counter-based cumulative-XOR of :func:`phase_bits`; the
+    diurnal ramp modulates by the arrival's own position in the cycle.
+    """
+    r_on, _ = mmpp_rates(spec.rate, spec.burstiness)
+    r_max = max(spec.rate * (1.0 + abs(spec.amp)), float(r_on), 1e-9)
+    n = int(duration * r_max * 1.4) + 64
+    u = uniform_block(seed, stream, n)
+    e1 = -np.log1p(-u)
+    if spec.process == "closed":
+        gaps = np.full(n, 1.0 / spec.rate)
+    elif spec.process == "poisson":
+        gaps = e1 / spec.rate
+    elif spec.process == "mmpp":
+        # Phase stream is the gap stream xor a high bit — never collides
+        # with another STREAM_* constant.
+        on = phase_bits(seed, n, spec.burst_len, stream=stream ^ 0x10000)
+        r_on, r_off = mmpp_rates(spec.rate, spec.burstiness)
+        gaps = e1 / np.where(on == 1, r_on, r_off)
+    else:  # diurnal: the rate seen by gap i follows the running clock
+        # Scalar host math (the loop is inherently sequential in t; a
+        # per-gap jnp dispatch here was measured ~17x slower).
+        import math
+        period = spec.period if spec.period > 0 else duration
+        gaps = np.empty(n)
+        t = 0.0
+        for i in range(n):
+            mod = 1.0 + spec.amp * math.sin(
+                2.0 * math.pi * ((t / period) % 1.0))
+            r = max(spec.rate * mod, 0.05 * spec.rate)
+            gaps[i] = e1[i] / r
+            t += gaps[i]
+    t = np.cumsum(gaps)
+    return t[t < duration]
+
+
+def service_times(spec: ServiceSpec, n: int, seed: int,
+                  *, stream: int = STREAM_SERVICE) -> np.ndarray:
+    """``n`` service times (mean ``spec.mean``), counter-based per index."""
+    u = uniform_block(seed, stream, n)
+    z = normal_block(seed, stream ^ 0x40000, n)
+    unit = np.asarray(service_unit(u, z, SERVICES[spec.dist],
+                                   spec.cv, spec.mix, spec.mix_scale))
+    return spec.mean * unit
+
+
+def client_think_gaps(seed, client: int, n: int,
+                      *, stream: int = STREAM_THINK) -> np.ndarray:
+    """Exp(1) think gaps for one closed-loop client — counter-based per
+    (client, request index); scale by the mean think time at the call."""
+    key = counter_key(stream_key(seed, stream), client)
+    u = np.asarray(_block(key, _pad_pow2(n), "uniform"))[:n]
+    return -np.log1p(-u.astype(np.float64))
+
+
+def choice(values, n: int, seed: int, *, stream: int = STREAM_COLS,
+           weights=None) -> np.ndarray:
+    """Counter-based categorical draw over ``values`` (uniform unless
+    ``weights``); replaces the serving sims' ad-hoc ``rng.choice``."""
+    values = np.atleast_1d(np.asarray(values))
+    u = uniform_block(seed, stream, n)
+    if weights is None:
+        idx = np.minimum((u * len(values)).astype(np.int64),
+                         len(values) - 1)
+    else:
+        w = np.asarray(weights, np.float64)
+        cum = np.cumsum(w / w.sum())
+        idx = np.searchsorted(cum, u, side="right")
+        idx = np.minimum(idx, len(values) - 1)
+    return values[idx]

@@ -1,0 +1,37 @@
+"""Examples smoke tests: run each example's ``main`` with tiny
+parameters so the examples can't silently rot (they are the documented
+entry points but were never executed by CI before this)."""
+
+import importlib.util
+import sys
+from pathlib import Path
+
+EXAMPLES = Path(__file__).resolve().parents[1] / "examples"
+
+
+def _load(name):
+    spec = importlib.util.spec_from_file_location(
+        f"examples_{name}", EXAMPLES / f"{name}.py")
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules[spec.name] = mod
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_quickstart_smoke(capsys):
+    qs = _load("quickstart")
+    # Tiny run: loss movement over 6 steps is noise, so only the
+    # train -> preempt -> restore -> finish contract is asserted.
+    out = qs.main(total_steps=6, preempt_at=3, ckpt_every=3,
+                  global_batch=2, seq_len=16, check_loss=False)
+    assert out["step"] == 6
+    assert "quickstart OK" in capsys.readouterr().out
+
+
+def test_lock_microbench_smoke(capsys):
+    mb = _load("lock_microbench")
+    mb.main(ns=(1, 4), slos=(50.0, 150.0), sim_time_us=1_500.0,
+            fracs=(0.5, 2.0))
+    out = capsys.readouterr().out
+    assert "Figure 1" in out and "Figure 8b" in out
+    assert "Load-latency" in out

@@ -1,0 +1,354 @@
+"""Workload-subsystem tests: generator moments, counter-based
+determinism, trace record->replay, open/closed-loop parity, workload
+sweep axes (one executable, sharded bit-parity), multi-class clients,
+and AIMDWindow vs aimd_update trajectory parity.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _minihypothesis import given, settings, strategies as st
+
+from repro.core import simlock as sl
+from repro.core.aimd import AIMDWindow, aimd_update
+from repro.workloads import generators as wlg
+from repro.workloads import traces as wlt
+from repro.workloads.clients import (ClientClass, WorkloadMix, amp_config,
+                                     assign_cores)
+from repro.workloads.generators import ArrivalSpec, ServiceSpec
+
+SET = dict(max_examples=10, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# Generator moment sanity
+# ---------------------------------------------------------------------------
+
+@given(rate=st.floats(0.5, 50.0), seed=st.integers(0, 1000))
+@settings(**SET)
+def test_poisson_arrival_rate(rate, seed):
+    t = wlg.arrival_times(ArrivalSpec("poisson", rate), 400.0, seed)
+    assert len(t) == pytest.approx(400.0 * rate, rel=0.15)
+    gaps = np.diff(t)
+    assert gaps.mean() == pytest.approx(1.0 / rate, rel=0.15)
+    # exponential: cv ~ 1
+    assert gaps.std() / gaps.mean() == pytest.approx(1.0, abs=0.2)
+
+
+@given(cv=st.floats(0.2, 2.5), seed=st.integers(0, 1000))
+@settings(**SET)
+def test_lognormal_service_moments(cv, seed):
+    s = wlg.service_times(ServiceSpec("lognormal", mean=3.0, cv=cv),
+                          20_000, seed)
+    assert s.mean() == pytest.approx(3.0, rel=0.1)
+    assert s.std() / s.mean() == pytest.approx(cv, rel=0.2)
+    assert (s > 0).all()
+
+
+@given(mix=st.floats(0.05, 0.5), scale=st.floats(2.0, 50.0),
+       seed=st.integers(0, 1000))
+@settings(**SET)
+def test_bimodal_service_mean_preserved(mix, scale, seed):
+    spec = ServiceSpec("bimodal", mean=2.0, mix=mix, mix_scale=scale)
+    s = wlg.service_times(spec, 20_000, seed)
+    assert s.mean() == pytest.approx(2.0, rel=0.1)
+    assert len(np.unique(np.round(s, 9))) == 2     # exactly two modes
+
+
+def test_mmpp_mean_rate_and_burstiness():
+    spec = ArrivalSpec("mmpp", rate=20.0, burstiness=10.0, burst_len=50.0)
+    t = wlg.arrival_times(spec, 2_000.0, seed=5)
+    assert len(t) == pytest.approx(2_000.0 * 20.0, rel=0.2)
+    # burstier than Poisson: index of dispersion of 1s bin counts >> 1
+    counts = np.histogram(t, bins=int(t[-1]))[0]
+    poisson_t = wlg.arrival_times(ArrivalSpec("poisson", 20.0), 2_000.0, 5)
+    pcounts = np.histogram(poisson_t, bins=int(poisson_t[-1]))[0]
+    assert counts.var() / counts.mean() > 2.0 * pcounts.var() / pcounts.mean()
+
+
+def test_diurnal_ramp_modulates_rate():
+    spec = ArrivalSpec("diurnal", rate=50.0, amp=0.9, period=100.0)
+    t = wlg.arrival_times(spec, 400.0, seed=7)
+    # first half-period (sin>0) must be busier than the second (sin<0)
+    phase = (t % 100.0) / 100.0
+    busy = np.sum(phase < 0.5)
+    quiet = np.sum(phase >= 0.5)
+    assert busy > 1.5 * quiet
+    assert len(t) == pytest.approx(400.0 * 50.0, rel=0.2)
+
+
+def test_closed_arrivals_are_deterministic_gaps():
+    t = wlg.arrival_times(ArrivalSpec("closed", 10.0), 10.0, seed=0)
+    np.testing.assert_allclose(np.diff(t), 0.1, rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Counter-based determinism + trace record/replay
+# ---------------------------------------------------------------------------
+
+def test_counter_draws_independent_of_block_size():
+    """Growing a draw block never perturbs its prefix (pure counters)."""
+    a = wlg.uniform_block(3, wlg.STREAM_THINK, 50)
+    b = wlg.uniform_block(3, wlg.STREAM_THINK, 5000)
+    np.testing.assert_array_equal(a, b[:50])
+
+
+def test_trace_generate_is_deterministic_and_seed_sensitive():
+    spec = (ArrivalSpec("mmpp", 20.0, burstiness=5.0),
+            ServiceSpec("bimodal", mean=0.1, mix=0.2))
+    a = wlt.generate(*spec, 50.0, seed=1)
+    b = wlt.generate(*spec, 50.0, seed=1)
+    c = wlt.generate(*spec, 50.0, seed=2)
+    np.testing.assert_array_equal(a.arrival_t, b.arrival_t)
+    np.testing.assert_array_equal(a.service_s, b.service_s)
+    assert not np.array_equal(a.arrival_t, c.arrival_t)
+
+
+def test_trace_npz_roundtrip_bit_exact(tmp_path):
+    mix = WorkloadMix((
+        ClientClass("lc", weight=3.0, slo=0.5,
+                    service=ServiceSpec("lognormal", mean=0.1, cv=1.0)),
+        ClientClass("be", weight=1.0, slo=5.0,
+                    service=ServiceSpec("exp", mean=0.3)),
+    ))
+    tr = wlt.generate(ArrivalSpec("poisson", 30.0), None, 20.0, seed=4,
+                      classes=mix,
+                      cols=wlt.request_columns([128, 256], [8, 16]))
+    p = wlt.save(tmp_path / "wl.npz", tr)
+    back = wlt.load(p)
+    np.testing.assert_array_equal(tr.arrival_t, back.arrival_t)
+    np.testing.assert_array_equal(tr.service_s, back.service_s)
+    np.testing.assert_array_equal(tr.klass, back.klass)
+    np.testing.assert_array_equal(tr.slo, back.slo)
+    assert back.classes == ("lc", "be")
+    for k in tr.cols:
+        np.testing.assert_array_equal(tr.cols[k], back.cols[k])
+    assert back.meta["seed"] == 4
+    # mix ratios: ~3:1 by weight
+    frac_lc = float(np.mean(back.klass == 0))
+    assert frac_lc == pytest.approx(0.75, abs=0.08)
+
+
+def test_dispatch_replays_trace_identically(tmp_path):
+    """The dispatch sim consuming one trace twice (once from disk) is
+    bit-identical — the trace IS the workload."""
+    from repro.serving.dispatch import simulate_dispatch
+    tr = wlt.generate(ArrivalSpec("poisson", 25.0),
+                      ServiceSpec("lognormal", mean=0.1,
+                                  cv=wlg.LEGACY_LOGNORMAL_CV),
+                      60.0, seed=9)
+    back = wlt.load(wlt.save(tmp_path / "d.npz", tr))
+    m1 = simulate_dispatch("asl", slo=0.5, trace=tr)
+    m2 = simulate_dispatch("asl", slo=0.5, trace=back)
+    assert m1 == m2
+
+
+def test_engine_replays_trace_identically(tmp_path):
+    from repro.serving.engine import ServingEngine, replay_workload
+    tr = wlt.generate(ArrivalSpec("poisson", 2.0), ServiceSpec(), 30.0,
+                      seed=2,
+                      cols=wlt.request_columns([2048, 4096], [16, 32]))
+    back = wlt.load(wlt.save(tmp_path / "e.npz", tr))
+    m1 = replay_workload(ServingEngine("asl", seed=1), tr,
+                         slo_ttft=0.6).metrics()
+    m2 = replay_workload(ServingEngine("asl", seed=1), back,
+                         slo_ttft=0.6).metrics()
+    assert m1 == m2
+
+
+def test_sim_epoch_draws_match_host_reconstruction():
+    """Device-side and host-side sims consume identical workloads: the
+    simulator's final per-core (scale, svc_scale, wl_on) state equals
+    the host's counter-based reconstruction at each core's epoch index."""
+    cfg = sl.SimConfig(policy="fifo", wl=True, wl_process="mmpp",
+                       wl_burst=6.0, wl_burst_len=12.0,
+                       wl_service="lognormal", wl_cv=1.3,
+                       sim_time_us=4_000.0)
+    st = sl.run(cfg, 1e9, seed=11)
+    ep = np.asarray(st.ep_cnt)
+    think, svc = wlg.epoch_scale_tables(
+        11, cfg.n_cores, int(ep.max()) + 1, process="mmpp", rate=1.0,
+        cv=1.3, burstiness=6.0, burst_len=12.0, service="lognormal")
+    got_scale = np.asarray(st.scale)
+    got_svc = np.asarray(st.svc_scale)
+    for c in range(cfg.n_cores):
+        np.testing.assert_allclose(got_scale[c], think[c, ep[c]],
+                                   rtol=1e-6)
+        np.testing.assert_allclose(got_svc[c], svc[c, ep[c]], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Workload axes in the batched sweep engine (acceptance: <=1 executable
+# per policy, sharded == unsharded bit-exact)
+# ---------------------------------------------------------------------------
+
+def _wl_cfg(**kw):
+    base = dict(policy="libasl", wl=True, wl_process="poisson",
+                wl_service="lognormal", wl_cv=1.0, sim_time_us=5_000.0)
+    base.update(kw)
+    return sl.SimConfig(**base)
+
+
+def test_workload_sweep_single_executable_and_cell_parity():
+    cfg = _wl_cfg()
+    n0 = sl.n_batch_executables()
+    st, grid = sl.sweep(cfg, {"arrival_rate": [0.5, 1.0, 2.0],
+                              "cv": [0.5, 2.0]}, slo_us=80.0)
+    assert sl.n_batch_executables() - n0 == 1
+    assert np.asarray(st.events).shape == (6,)
+    # cell 0 == a dedicated single run with the same traced values
+    c0 = dataclasses.replace(cfg, wl_rate=0.5, wl_cv=0.5)
+    want = sl.summarize(c0, sl.run(c0, 80.0))
+    got = sl.summarize(cfg, jax.tree.map(lambda x: np.asarray(x)[0], st))
+    assert got["events"] == want["events"]
+    np.testing.assert_allclose(got["throughput_cs_per_s"],
+                               want["throughput_cs_per_s"], rtol=1e-9)
+
+
+def test_workload_sweep_sharded_bit_identical():
+    """Acceptance: a stochastic-workload sweep is bit-identical sharded
+    vs unsharded on the 8 virtual devices (counter-based draws cannot
+    see the sharding)."""
+    from repro.launch.mesh import make_sweep_mesh
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >1 (virtual) device")
+    cfg = _wl_cfg(wl_process="mmpp", wl_burst=4.0)
+    axes = {"arrival_rate": [0.5, 1.5, 3.0], "burstiness": [1.0, 8.0]}
+    a, ga = sl.sweep(cfg, axes, slo_us=100.0)
+    b, gb = sl.sweep(cfg, axes, slo_us=100.0, mesh=make_sweep_mesh())
+    for k in ga:
+        np.testing.assert_array_equal(ga[k], gb[k])
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_closed_loop_engine_driver_policy_independent_workload():
+    """The closed-loop engine driver: deterministic per seed, and one
+    client's (think, shape) sequence cannot depend on the policy under
+    test (per-(client, submission) counters, not a global draw order)."""
+    from repro.serving.engine import ServingEngine, closed_loop_workload
+
+    def run(policy):
+        kw = dict(default_window=0.02, max_window=10.0) \
+            if policy == "asl" else {}
+        eng = closed_loop_workload(
+            ServingEngine(policy, scheduler_kwargs=kw),
+            n_clients=1, think_s=0.2, duration_s=20.0,
+            prompt_lens=[2048, 4096, 8192], new_tokens=[16, 32, 64],
+            slo_ttft=0.6, seed=0)
+        return [(r.prompt_len, r.max_new_tokens)
+                for r in sorted(eng.done, key=lambda r: r.rid)]
+
+    asl, fifo = run("asl"), run("fifo")
+    n = min(len(asl), len(fifo))
+    assert n > 20
+    assert asl[:n] == fifo[:n]          # identical workload per client
+    assert run("asl") == asl            # deterministic per seed
+
+
+def test_open_vs_closed_loop_parity_at_matched_load():
+    """At low offered load the open-loop (Poisson think) and closed-loop
+    (deterministic think) systems see the same mean rates — throughput
+    within 10%; padding/queueing differences only appear near
+    saturation."""
+    tputs = {}
+    for proc in ("closed", "poisson"):
+        cfg = sl.SimConfig(policy="fifo", wl=True, wl_process=proc,
+                           wl_rate=0.25, sim_time_us=30_000.0)
+        s = sl.summarize(cfg, sl.run(cfg, 1e9, seed=3))
+        tputs[proc] = s["throughput_cs_per_s"]
+    assert tputs["poisson"] == pytest.approx(tputs["closed"], rel=0.1)
+
+
+def test_workload_off_bit_shares_executable_with_seed_path():
+    """wl=False configs must keep compiling to the same canonical key
+    regardless of wl_* numeric fields (they are canonicalized out)."""
+    a = sl._canon(sl.SimConfig(policy="fifo"))
+    b = sl._canon(sl.SimConfig(policy="fifo", wl_rate=7.0, wl_cv=3.0,
+                               wl_process="mmpp", slo_scale=(2.0,) * 8))
+    assert a == b
+    c = sl._canon(sl.SimConfig(policy="fifo", wl=True))
+    assert c != a
+
+
+# ---------------------------------------------------------------------------
+# Multi-class clients
+# ---------------------------------------------------------------------------
+
+def test_assign_cores_honors_affinity_and_weights():
+    mix = WorkloadMix((
+        ClientClass("lc", weight=1.0, slo=100.0, affinity="big"),
+        ClientClass("be", weight=1.0, slo=1000.0, affinity="little"),
+    ))
+    big = (1, 1, 1, 1, 0, 0, 0, 0)
+    assign = assign_cores(mix, big)
+    for c, k in enumerate(assign):
+        assert (k == 0) == bool(big[c])
+
+
+def test_amp_config_slo_scale_rides_in_tables():
+    mix = WorkloadMix((
+        ClientClass("lc", weight=1.0, slo=50.0, affinity="big"),
+        ClientClass("be", weight=1.0, slo=500.0, affinity="little"),
+    ))
+    cfg, assign = amp_config(sl.SimConfig(policy="libasl",
+                                          sim_time_us=4_000.0), mix,
+                             base_slo=50.0)
+    assert cfg.slo_scale == (1.0,) * 4 + (10.0,) * 4
+    tb = sl.build_tables(cfg)
+    np.testing.assert_array_equal(np.asarray(tb.slo_scale),
+                                  np.asarray(cfg.slo_scale, np.float32))
+    st = sl.run(cfg, 50.0, seed=0)          # base_slo as the run SLO
+    assert int(st.events) > 0
+
+
+def test_multiclass_engine_keeps_per_class_windows():
+    from repro.serving.engine import CostModel, ServingEngine
+    from repro.workloads.clients import (metrics_by_class,
+                                         multiclass_workload)
+    mix = WorkloadMix((
+        ClientClass("lc", weight=1.0, slo=0.3,
+                    service=ServiceSpec("exp", mean=1.0)),
+        ClientClass("be", weight=1.0, slo=3.0,
+                    service=ServiceSpec("exp", mean=1.0)),
+    ))
+    eng = ServingEngine("asl", CostModel(), scheduler_kwargs=dict(
+        default_window=0.02, max_window=10.0), seed=0)
+    multiclass_workload(eng, mix, rate_rps=2.0, duration_s=40.0,
+                        prompt_lens=[2048, 4096], new_tokens=[16, 32],
+                        seed=1)
+    per = metrics_by_class(eng, mix)
+    assert per["lc"]["n"] > 0 and per["be"]["n"] > 0
+    # one AIMD window per class, and the tight class converged tighter
+    assert set(eng.sched._windows) == {0, 1}
+    assert eng.sched.window(0) <= eng.sched.window(1)
+
+
+# ---------------------------------------------------------------------------
+# AIMDWindow vs aimd_update trajectory parity
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 5000), n=st.integers(1, 60),
+       slo=st.floats(10.0, 1000.0))
+@settings(**SET)
+def test_aimd_host_vs_jnp_trajectory_parity(seed, n, slo):
+    """Sequence-level parity: iterating the host AIMDWindow and the
+    functional aimd_update over one latency stream stays in lockstep
+    (the single-step test cannot catch drift through the carried unit)."""
+    lat = wlg.uniform_block(seed, 0x1234, n) * 2.0 * slo
+    host = AIMDWindow(window=3 * slo, unit=3 * slo * 0.01, pct=99.0,
+                      max_window=1e6)
+    w = np.float32(3 * slo)
+    u = np.float32(3 * slo * 0.01)
+    for x in lat:
+        host.update(float(x), slo)
+        w, u = aimd_update(w, u, np.float32(x), np.float32(slo),
+                           pct=99.0, max_window=1e6)
+        np.testing.assert_allclose(float(w), host.window, rtol=1e-5)
+        np.testing.assert_allclose(float(u), host.unit, rtol=1e-5)
