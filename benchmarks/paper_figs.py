@@ -82,15 +82,34 @@ def _sweep_rows(cfg, axes, namer, *, slo_us=1e9, product=True, extra=None):
 # ---------------------------------------------------------------------------
 # Figure 1: throughput/latency collapse scaling 1..8 threads
 # (TAS shows little-core-affinity in this regime)
-# 24 cells, 3 compilations: the n axis is an active-core mask, w_big traced.
+# Registry-driven: every policy in repro.core.policies gets a curve — 48
+# cells, one compilation per policy (the n axis is an active-core mask;
+# w_big and the per-policy knobs ride traced).
 # ---------------------------------------------------------------------------
+
+# Per-policy fig1 calibration: non-default knobs + the SLO the policy
+# tracks (1e9 = pure-throughput mode).  Policies absent here run with
+# defaults, so a newly registered policy appears in fig1 automatically.
+FIG1_KW = {"tas": dict(w_big=0.15)}
+FIG1_SLO = {"libasl": 1e9, "edf": 100.0}
+
+
+def fig1_policies():
+    """The fig1 workload per registered policy — also the acceptance
+    benchmark's grid (benchmarks/simperf reuses this, so the perf
+    protocol can never drift from the figure it tracks)."""
+    from repro.core.policies import REGISTRY
+    return [(name, _cfg(name, 8, **FIG1_KW.get(name, {})),
+             FIG1_SLO.get(name, 1e9)) for name in REGISTRY]
+
 
 def fig1_collapse():
     rows = []
-    for pol, kw in (("fifo", {}), ("tas", dict(w_big=0.15)), ("prop", {})):
+    for pol, cfg, slo in fig1_policies():
         rows += _sweep_rows(
-            _cfg(pol, 8, **kw), {"n_cores": list(range(1, 9))},
+            cfg, {"n_cores": list(range(1, 9))},
             lambda c, p=pol: f"fig1/{p}/n{c['n_cores']}",
+            slo_us=slo,
             extra=lambda c, s: dict(n_threads=int(c["n_cores"])))
     return rows
 
@@ -370,6 +389,51 @@ def loadlat_sweep(slo=200.0):
 
 
 # ---------------------------------------------------------------------------
+# Open-loop load-latency sweep: arrivals as events (cfg.wl_open), not
+# think-scaling — each core runs an open queue, so epoch latency is the
+# full sojourn from arrival and the curves show the classic open-loop
+# knee (latency diverges at the saturation point instead of the
+# closed-loop's self-throttled plateau).  The load axis is the traced
+# ``arrival_rate`` — one executable per policy for the whole curve.
+# ---------------------------------------------------------------------------
+
+def _openloop_rate(frac: float) -> float:
+    """wl_rate that offers ``frac`` of lock capacity in open-loop mode:
+    core ``c`` contributes ``rate / base_c`` arrivals per us (base = its
+    closed-loop think budget ``(noncrit0 + inter) * speed_nc``), each
+    holding the lock for its CS time."""
+    cfg = _cfg("fifo", 8)
+    cs = [sum(d * cfg.speed_cs[c] for d in cfg.seg_cs_us)
+          for c in range(cfg.n_cores)]
+    base = [(cfg.seg_noncrit_us[0] + cfg.inter_epoch_us) * cfg.speed_nc[c]
+            for c in range(cfg.n_cores)]
+    return frac / sum(c / b for c, b in zip(cs, base))
+
+
+def openloop_loadlat(slo=300.0):
+    """Open-loop offered load -> throughput + sojourn P99 per policy
+    (fifo baseline, the paper's libasl, and the shfl plugin — the two
+    throughput-first points bracket the AIMD policy)."""
+    from benchmarks.serving_bench import LOAD_FRACS
+    fracs = tuple(LOAD_FRACS) + (1.1,)     # one past-saturation point
+    rates = [_openloop_rate(f) for f in fracs]
+    wl = dict(wl=True, wl_open=True, wl_process="poisson",
+              wl_service="lognormal", wl_cv=1.0, sim_time_us=60_000.0)
+    rows = []
+    for pol, kw, slo_us in (("fifo", {}, 1e9),
+                            ("shfl", {}, 1e9),
+                            ("libasl", {}, slo)):
+        rows += _sweep_rows(
+            _cfg(pol, 8, **wl, **kw), {"arrival_rate": rates},
+            lambda c, p=pol: (f"openloop/{p}/"
+                              f"f{fracs[rates.index(c['arrival_rate'])]:.2f}"),
+            slo_us=slo_us,
+            extra=lambda c, s: dict(
+                load_frac=fracs[rates.index(c["arrival_rate"])]))
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # Bench-6: blocking locks / oversubscription — wakeup latency on the
 # FIFO handoff path; LibASL standbys dodge it (wakeup is a traced axis)
 # ---------------------------------------------------------------------------
@@ -403,4 +467,5 @@ ALL = {
     "bench5_contention": bench5_contention,
     "bench6_blocking": bench6_blocking,
     "loadlat_sweep": loadlat_sweep,
+    "openloop_loadlat": openloop_loadlat,
 }

@@ -16,7 +16,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.dist.staleness import BoundedStalenessController, simulate
-from repro.serving.dispatch import simulate_dispatch
+from repro.serving.dispatch import DISPATCH_POLICIES, simulate_dispatch
 from repro.serving.engine import CostModel, ServingEngine, poisson_workload
 from repro.workloads import ClientClass, WorkloadMix
 from repro.workloads.clients import metrics_by_class, multiclass_workload
@@ -35,7 +35,9 @@ ENGINE_POLICIES = (
     ("asl-warm", "asl", dict(default_window=0.02, max_window=10.0,
                              warm_start=True, mi_factor=0.5)),
 )
-DISPATCH_POLICIES = ("fair", "fast-only", "asl")
+# DISPATCH_POLICIES is imported from repro.serving.dispatch — derived
+# from the lock-policy registry (LockPolicy.host_dispatch), one naming
+# scheme across the simulator, schedulers and fleet benches.
 # Offered load as a fraction of fleet capacity; shared with the
 # lock-level load-latency figure so both sweeps probe the same points.
 LOAD_FRACS = (0.2, 0.4, 0.6, 0.8, 0.9)

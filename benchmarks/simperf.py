@@ -76,35 +76,41 @@ def _hlo_accounting(log_start: int) -> dict:
 
 
 def _fig1_policies(quick: bool):
-    """Exactly fig1's workload — reuse paper_figs' calibration so this
-    benchmark can never drift from the figure it claims to track."""
+    """Exactly fig1's workload — reuse paper_figs' calibration (every
+    registered policy, one executable each) so this benchmark can never
+    drift from the figure it claims to track."""
     from benchmarks import paper_figs
     paper_figs.SIM_SCALE = 0.1 if quick else 1.0
-    return [paper_figs._cfg(pol, 8, **kw)
-            for pol, kw in (("fifo", {}), ("tas", dict(w_big=0.15)),
-                            ("prop", {}))]
+    return paper_figs.fig1_policies()
 
 
 def bench_fig1_batched_vs_seed(quick: bool) -> dict:
-    """The acceptance benchmark: fig1's 24 cells, batched vs. per-cell."""
+    """The acceptance benchmark: fig1's cells (8 thread counts x every
+    registered policy), batched vs. per-cell."""
     from concurrent.futures import ThreadPoolExecutor
     from benchmarks import paper_figs
     cfgs = _fig1_policies(quick)
     ns = list(range(1, 9))
 
-    def one_policy(cfg):
-        st, _ = sl.sweep(cfg, {"n_cores": ns}, mesh=paper_figs.MESH)
+    def one_policy(arg):
+        _, cfg, slo = arg
+        st, _ = sl.sweep(cfg, {"n_cores": ns}, slo_us=slo,
+                         mesh=paper_figs.MESH)
         jax.block_until_ready(st.events)
         return _events(st)
 
-    # --- batched sweep engine: one executable per policy, the three
-    # policies dispatched concurrently (independent executables; XLA
-    # releases the GIL, so they overlap on the container's cores).  The
-    # seed path below stays sequential — exactly how the seed ran it.
-    # Mesh-sharded sweeps must NOT overlap in one process: XLA CPU's
-    # collective rendezvous interleaves participants from concurrent
-    # executables sharing a device set and deadlocks.
-    n_workers = 1 if paper_figs.MESH is not None else len(cfgs)
+    # --- batched sweep engine: one executable per policy, the policies
+    # dispatched concurrently (independent executables; XLA releases the
+    # GIL, so they overlap on the container's cores).  Concurrency is
+    # capped at cores+1: with the registry at 6 policies, 6 concurrent
+    # XLA compiles on 2 cores thrash (measured 59s cold vs 43s at 3
+    # workers).  The seed path below stays sequential — exactly how the
+    # seed ran it.  Mesh-sharded sweeps must NOT overlap in one process:
+    # XLA CPU's collective rendezvous interleaves participants from
+    # concurrent executables sharing a device set and deadlocks.
+    import os
+    n_workers = 1 if paper_figs.MESH is not None else \
+        min(len(cfgs), (os.cpu_count() or 2) + 1)
     with ThreadPoolExecutor(n_workers) as pool:
         c0 = _compiles()
         h0 = len(sl.sweep_log())
@@ -122,16 +128,18 @@ def bench_fig1_batched_vs_seed(quick: bool) -> dict:
     # iteration (chunk=1), exactly as the seed simulator ran it.
     c0 = _compiles()
     t0 = time.time()
-    for cfg in cfgs:
+    for pol, _, slo in cfgs:
         for n in ns:
             cell = dataclasses.replace(
-                paper_figs._cfg(cfg.policy, n, w_big=cfg.w_big), chunk=1)
-            jax.block_until_ready(sl.run(cell, 1e9).events)
+                paper_figs._cfg(pol, n, **paper_figs.FIG1_KW.get(pol, {})),
+                chunk=1)
+            jax.block_until_ready(sl.run(cell, slo).events)
     seed_wall = time.time() - t0
     seed_compiles = _compiles() - c0
 
     return {
         "cells": len(cfgs) * len(ns),
+        "policies": len(cfgs),
         "events": events,
         "batched_wall_s": round(batched_cold, 2),
         "batched_hot_s": round(batched_hot, 2),

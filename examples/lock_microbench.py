@@ -2,9 +2,11 @@
 
     PYTHONPATH=src python examples/lock_microbench.py
 
-Prints Figure-1-style scaling (MCS collapse, TAS latency collapse) and the
-Figure-8b SLO sweep (LibASL throughput grows with the SLO while the little-
-core P99 tracks the SLO line).
+Prints the full policy matrix (every policy registered in
+repro.core.policies — new plugins appear here automatically),
+Figure-1-style scaling (MCS collapse, TAS latency collapse) and the
+Figure-8b SLO sweep (LibASL throughput grows with the SLO while the
+little-core P99 tracks the SLO line).
 """
 
 import pathlib
@@ -18,6 +20,24 @@ import jax                                  # noqa: E402
 import numpy as np                          # noqa: E402
 
 from repro.core import simlock as sl        # noqa: E402
+from repro.core.policies import REGISTRY    # noqa: E402
+
+
+def policy_matrix(slo_us=100.0, sim_time_us=20_000.0):
+    """One row per *registered* lock policy, same 4+4 AMP workload —
+    a new policy plugin shows up here (and in the CI probe) for free."""
+    print(f"== Policy matrix: {len(REGISTRY)} registered policies "
+          f"(SLO {slo_us:.0f}us) ==")
+    print(f"{'policy':>8} {'tput':>9} {'little p99':>11} {'big p99':>9} "
+          f"{'little share':>13}")
+    for name in REGISTRY:
+        cfg = sl.SimConfig(policy=name, sim_time_us=sim_time_us)
+        s = sl.summarize(cfg, sl.run(cfg, slo_us))
+        cs = np.asarray(s["cs_per_core"], float)
+        share = cs[4:].sum() / max(cs.sum(), 1.0)
+        print(f"{name:>8} {s['throughput_cs_per_s']:>9.0f} "
+              f"{s['ep_p99_little_us']:>10.1f}u "
+              f"{s['ep_p99_big_us']:>8.1f}u {share:>12.0%}")
 
 
 def figure1(ns=range(1, 9), sim_time_us=40_000.0):
@@ -77,11 +97,27 @@ def loadlat(fracs=(0.4, 0.9, 3.0), sim_time_us=20_000.0):
               f"{a['ep_p99_little_us']:>8.1f}u")
 
 
+def openloop(fracs=(0.4, 0.9, 1.1), sim_time_us=20_000.0):
+    print("\n== Open-loop arrivals (wl_open: arrivals as events) ==")
+    from benchmarks.paper_figs import _openloop_rate
+    rates = [_openloop_rate(f) for f in fracs]
+    cfg = sl.SimConfig(policy="libasl", wl=True, wl_open=True,
+                       wl_process="poisson", sim_time_us=sim_time_us)
+    st, _ = sl.sweep(cfg, {"arrival_rate": rates}, slo_us=300.0)
+    print(f"{'load':>5} {'tput':>9} {'sojourn p99':>12}")
+    for i, f in enumerate(fracs):
+        s = sl.summarize(cfg, jax.tree.map(lambda x, i=i: x[i], st))
+        print(f"{f:>5.1f} {s['throughput_cs_per_s']:>9.0f} "
+              f"{s['ep_p99_all_us']:>11.1f}u")
+
+
 def main(ns=range(1, 9), slos=(20., 40., 60., 80., 100., 150., 200.),
          sim_time_us=40_000.0, fracs=(0.4, 0.9, 3.0)):
+    policy_matrix(sim_time_us=sim_time_us / 2)
     figure1(ns, sim_time_us)
     figure8b(slos, sim_time_us)
     loadlat(fracs, sim_time_us=sim_time_us / 2)
+    openloop(sim_time_us=sim_time_us / 2)
 
 
 if __name__ == "__main__":

@@ -4,20 +4,24 @@
 * :mod:`repro.core.locks`        — FIFO/TAS/ticket/proportional baselines.
 * :mod:`repro.core.reorderable`  — Algorithm 1 (reorderable lock).
 * :mod:`repro.core.libasl`       — Algorithms 2+3 (epoch API, ASL mutex).
+* :mod:`repro.core.policies`     — the pluggable lock-policy registry (the
+  simulator's policy ids, host scheduler + dispatch names derive from it).
 * :mod:`repro.core.simlock`      — JAX discrete-event AMP simulator (figures).
 * :mod:`repro.core.asl_schedule` — the lock ordering as an engine-slot
   admission policy (serving / straggler mitigation).
 """
 
-from repro.core.aimd import AIMDWindow, aimd_update
+from repro.core.aimd import AIMDWindow, aimd_update, unit_for
 from repro.core.asl_schedule import (ASLScheduler, FIFOScheduler,
                                      GreedyScheduler, SCHEDULERS)
 from repro.core.libasl import ASLMutex, LibASL
 from repro.core.locks import FIFOLock, ProportionalLock, TASLock, TicketLock
+from repro.core.policies import REGISTRY, LockPolicy
 from repro.core.reorderable import ReorderableLock
 
 __all__ = [
-    "AIMDWindow", "aimd_update", "ASLScheduler", "FIFOScheduler",
-    "GreedyScheduler", "SCHEDULERS", "ASLMutex", "LibASL", "FIFOLock",
-    "ProportionalLock", "TASLock", "TicketLock", "ReorderableLock",
+    "AIMDWindow", "aimd_update", "unit_for", "ASLScheduler",
+    "FIFOScheduler", "GreedyScheduler", "SCHEDULERS", "ASLMutex", "LibASL",
+    "FIFOLock", "ProportionalLock", "TASLock", "TicketLock",
+    "ReorderableLock", "LockPolicy", "REGISTRY",
 ]

@@ -29,6 +29,16 @@ MAX_WINDOW = 100_000_000.0  # paper: 100ms upper bound => starvation-free
 MIN_WINDOW = 0.0
 
 
+def unit_for(window: float, pct: float = 99.0) -> float:
+    """The additive-increase unit for a window at violation percentile
+    ``pct`` — ``window * (100 - pct) / 100`` (paper footnote 4: with
+    PCT=99 the post-recovery violation probability is ~1%).  The ONE
+    place this formula lives; every consumer (host mutex, admission
+    schedulers, fleet dispatch, staleness controller, the simulator's
+    traced ``unit0``) derives its unit here."""
+    return window * (100.0 - pct) / 100.0
+
+
 @dataclasses.dataclass
 class AIMDWindow:
     """Per-(thread, epoch-id) reorder window state (paper Algorithm 2).
@@ -46,7 +56,7 @@ class AIMDWindow:
         if latency > slo:
             # Exponential reduction (paper line 25-26).
             self.window = self.window / 2.0
-            self.unit = self.window * (100.0 - self.pct) / 100.0
+            self.unit = unit_for(self.window, self.pct)
         # Linear growth, applied unconditionally (paper line 28).
         self.window = min(self.window + self.unit, self.max_window)
         self.window = max(self.window, MIN_WINDOW)
@@ -57,6 +67,6 @@ def aimd_update(window, unit, latency, slo, *, pct=99.0, max_window=MAX_WINDOW):
     """Functional Algorithm 2 step. All args may be jnp arrays (vmap-safe)."""
     violated = latency > slo
     w = jnp.where(violated, window * 0.5, window)
-    u = jnp.where(violated, w * (100.0 - pct) / 100.0, unit)
+    u = jnp.where(violated, unit_for(w, pct), unit)
     w = jnp.clip(w + u, MIN_WINDOW, max_window)
     return w, u

@@ -36,7 +36,8 @@ import itertools
 import typing
 from collections import deque
 
-from repro.core.aimd import AIMDWindow
+from repro.core.aimd import AIMDWindow, unit_for
+from repro.core.policies import REGISTRY
 
 
 @dataclasses.dataclass
@@ -172,7 +173,7 @@ class ASLScheduler(SchedulerBase):
         if epoch_id not in self._windows:
             self._windows[epoch_id] = AIMDWindow(
                 window=self._default_window,
-                unit=self._default_window * (100.0 - self._pct) / 100.0,
+                unit=unit_for(self._default_window, self._pct),
                 pct=self._pct, max_window=self._max_window)
         return self._windows[epoch_id]
 
@@ -220,7 +221,7 @@ class ASLScheduler(SchedulerBase):
             if latency < slo:
                 # Beyond-paper: jump to the measured headroom.
                 w.window = min(max(slo - latency, w.window), w.max_window)
-                w.unit = w.window * (100.0 - self._pct) / 100.0
+                w.unit = unit_for(w.window, self._pct)
                 return
         self._seen.add(epoch_id)
         before = w.window
@@ -234,8 +235,16 @@ class ASLScheduler(SchedulerBase):
         return len(self._fifo) + len(self._standby)
 
 
-SCHEDULERS = {
+# Admission-scheduler names are keyed off the lock-policy registry: each
+# LockPolicy with a host analogue declares it as ``host_scheduler``
+# (fifo -> fifo, tas big-affinity -> greedy, libasl -> asl), so the
+# serving engine, benchmarks and the lock simulator agree on one naming
+# scheme.  A new lock policy with a host analogue registers its
+# scheduler class here.
+_IMPL = {
     "fifo": FIFOScheduler,
     "greedy": GreedyScheduler,
     "asl": ASLScheduler,
 }
+SCHEDULERS = {p.host_scheduler: _IMPL[p.host_scheduler]
+              for p in REGISTRY.values() if p.host_scheduler}

@@ -30,11 +30,10 @@ from __future__ import annotations
 import threading
 import time
 
-from repro.core.aimd import AIMDWindow
+from repro.core.aimd import AIMDWindow, unit_for
 from repro.core.reorderable import MAX_WINDOW_NS, ReorderableLock
 
 DEFAULT_WINDOW_NS = 1_000.0
-DEFAULT_UNIT_NS = 10.0
 
 
 class _EpochTLS(threading.local):
@@ -68,7 +67,8 @@ class LibASL:
         tls.cur_epoch_id = epoch_id
         if epoch_id not in tls.epochs:
             tls.epochs[epoch_id] = AIMDWindow(
-                window=DEFAULT_WINDOW_NS, unit=DEFAULT_UNIT_NS, pct=self.pct,
+                window=DEFAULT_WINDOW_NS,
+                unit=unit_for(DEFAULT_WINDOW_NS, self.pct), pct=self.pct,
                 max_window=MAX_WINDOW_NS)
         tls.starts.setdefault(epoch_id, []).append(self._clock())
 

@@ -1,0 +1,74 @@
+"""Pluggable lock-policy registry.
+
+The simulator's event loop (:mod:`repro.core.simlock`) is policy-
+agnostic: everything a policy decides — grab / queue / standby / spin on
+an acquire attempt, who gets the lock at release, what feedback runs at
+an epoch end — lives in a :class:`~repro.core.policies.base.LockPolicy`
+subclass registered here.  ``simlock.POLICIES`` ids, the host-side
+scheduler names (:mod:`repro.core.asl_schedule`) and the fleet-dispatch
+policy names (:mod:`repro.serving.dispatch`) all derive from this one
+registry, so a new policy lands everywhere at once (see
+docs/simulator.md §Adding a lock policy).
+
+Registration order is load-bearing: it fixes the integer policy ids
+(``fifo=0, tas=1, prop=2, libasl=3, edf=4, shfl=5``) — append new
+policies, never reorder.
+"""
+
+from __future__ import annotations
+
+from repro.core.policies.base import LockPolicy
+
+#: name -> the singleton policy instance, in registration order.
+REGISTRY: dict = {}
+
+
+def register(cls):
+    """Class decorator: instantiate and register a LockPolicy."""
+    pol = cls()
+    if not pol.name:
+        raise ValueError(f"{cls.__name__} has no policy name")
+    if pol.name in REGISTRY:
+        raise ValueError(f"duplicate lock policy {pol.name!r}")
+    REGISTRY[pol.name] = pol
+    return cls
+
+
+def get(name: str) -> LockPolicy:
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown lock policy {name!r}; registered: "
+                         f"{sorted(REGISTRY)}") from None
+
+
+def policy_ids() -> dict:
+    """name -> stable integer id (registration order)."""
+    return {name: i for i, name in enumerate(REGISTRY)}
+
+
+def host_schedulers() -> dict:
+    """Lock-policy name -> host admission-scheduler name (the
+    asl_schedule analogue), for policies that have one."""
+    return {p.name: p.host_scheduler for p in REGISTRY.values()
+            if p.host_scheduler}
+
+
+def dispatch_names() -> tuple:
+    """Fleet-dispatch policy names (repro.serving.dispatch), in
+    registry order."""
+    return tuple(p.host_dispatch for p in REGISTRY.values()
+                 if p.host_dispatch)
+
+
+# Import order == registry order == policy ids.  The first four preserve
+# the pre-registry POLICIES ids exactly.
+from repro.core.policies import fifo as _fifo          # noqa: E402,F401
+from repro.core.policies import tas as _tas            # noqa: E402,F401
+from repro.core.policies import prop as _prop          # noqa: E402,F401
+from repro.core.policies import libasl as _libasl      # noqa: E402,F401
+from repro.core.policies import edf as _edf            # noqa: E402,F401
+from repro.core.policies import shfl as _shfl          # noqa: E402,F401
+
+__all__ = ["LockPolicy", "REGISTRY", "register", "get", "policy_ids",
+           "host_schedulers", "dispatch_names"]

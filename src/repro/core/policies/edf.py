@@ -1,0 +1,53 @@
+"""EDF — earliest-deadline-first grant (latency-first baseline).
+
+Every waiter's deadline is its epoch's SLO expiry (``epoch_start +
+slo * slo_scale[core]`` — the same per-core class-SLO table LibASL
+tracks); the releaser grants the most urgent waiter.  A pure
+latency-first scheduler: it ignores core asymmetry entirely, so under
+contention the slow cores' earlier deadlines drag the lock onto little
+cores — the throughput anti-pode of ShflLock-style big-affinity, and
+the baseline the paper's AIMD policy has to beat on *both* axes.
+
+Queue-less: waiters park in QUEUED and the releaser scans the waiting
+mask (INF-masked — padded cores can never win, so batched/padded/
+sharded runs stay bit-identical).  Deadline arithmetic is exact i32
+ticks: the per-core SLO is clamped to the starvation cap
+(``max_window_us`` — also what makes a huge "pure-throughput" SLO
+degrade to bounded arrival order instead of float-quantization index
+bias), and exact deadline ties break by attempt time (arrival order),
+not core index.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.policies import register
+from repro.core.policies.base import (INF, LockPolicy, grant, queueless_acquire,
+                                      ticks, waiting_mask)
+
+
+@register
+class EdfPolicy(LockPolicy):
+    name = "edf"
+    param_slots = ("slo",)
+    table_slots = ("slo_scale",)
+
+    def on_acquire(self, st, cfg, tb, pm, c, t, cond):
+        return queueless_acquire(st, cfg, tb, pm, c, t, cond)
+
+    def pick_next(self, st, cfg, tb, pm, l, t, cond):
+        waiting = waiting_mask(st, tb, l)
+        # i32 tick arithmetic stays exact where f32 ulp (8192 ticks at
+        # slo=1e9us) would quantize every deadline into an index-order
+        # scramble; the clamp keeps the sum far from i32 overflow AND
+        # bounds how long any waiter can be deferred.
+        slo_t = jnp.minimum(pm.slo * tb.slo_scale,
+                            jnp.float32(ticks(cfg.max_window_us))
+                            ).astype(jnp.int32)
+        dl = jnp.where(waiting, st.epoch_start + slo_t, INF)
+        tie = jnp.logical_and(waiting, dl == jnp.min(dl))
+        pick = jnp.argmin(jnp.where(tie, st.attempt_t,
+                                    INF)).astype(jnp.int32)
+        has = jnp.logical_and(jnp.any(waiting), cond)
+        return grant(st, cfg, tb, pm, has, pick, t, wakeup=True)

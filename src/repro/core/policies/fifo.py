@@ -1,0 +1,33 @@
+"""Strict FIFO handoff — the MCS-equivalent baseline (Implication 1)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.policies import register
+from repro.core.policies.base import (LockPolicy, QUEUED, deq, enq, grant,
+                                      park, qlen)
+
+
+@register
+class FifoPolicy(LockPolicy):
+    name = "fifo"
+    state_slots = ("q", "q_head", "q_tail")
+    host_scheduler = "fifo"
+    host_dispatch = "fair"
+
+    def on_acquire(self, st, cfg, tb, pm, c, t, cond):
+        l = tb.seg_lock[st.seg[c]]
+        free = st.holder[l] == -1
+        q_empty = qlen(st, l, 0) == 0
+        grab = jnp.logical_and(jnp.logical_and(free, q_empty), cond)
+        wait = jnp.logical_and(
+            jnp.logical_not(jnp.logical_and(free, q_empty)), cond)
+        st = grant(st, cfg, tb, pm, grab, c, t)
+        st = enq(st, wait, l, 0, c)
+        return park(st, wait, c, QUEUED)
+
+    def pick_next(self, st, cfg, tb, pm, l, t, cond):
+        nonempty = jnp.logical_and(qlen(st, l, 0) > 0, cond)
+        st, cq = deq(st, nonempty, l, 0)
+        return grant(st, cfg, tb, pm, nonempty, cq, t, wakeup=True)

@@ -1,0 +1,88 @@
+"""LibASL — the paper's policy: big cores enqueue immediately; little
+cores stand by for an AIMD-controlled reorder window (Algorithms 1-3).
+The AIMD step is the shared :func:`repro.core.aimd.aimd_update` — the
+same Algorithm 2 the host-side mutex and schedulers run."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aimd import aimd_update
+from repro.core.policies import register
+from repro.core.policies.base import (INF, LockPolicy, QUEUED, STANDBY, deq,
+                                      enq, grant, park, qlen, ticks,
+                                      weighted_pick)
+
+
+@register
+class LibASLPolicy(LockPolicy):
+    name = "libasl"
+    uses_standby = True
+    param_slots = ("slo", "unit0")
+    table_slots = ("big", "slo_scale")
+    state_slots = ("window", "unit", "q", "q_head", "q_tail")
+    host_scheduler = "asl"
+    host_dispatch = "asl"
+
+    def on_acquire(self, st, cfg, tb, pm, c, t, cond):
+        l = tb.seg_lock[st.seg[c]]
+        is_big = tb.big[c] == 1
+        free = st.holder[l] == -1
+        q_empty = qlen(st, l, 0) == 0
+        can_grab = jnp.logical_and(free, q_empty)
+        grab = jnp.logical_and(can_grab, cond)
+        # Big cores: lock_immediately == FIFO enqueue. Little: standby.
+        wait = jnp.logical_and(jnp.logical_not(can_grab), cond)
+        enq_c = jnp.logical_and(wait, is_big)
+        standby = jnp.logical_and(wait, jnp.logical_not(is_big))
+        st = grant(st, cfg, tb, pm, grab, c, t)
+        st = enq(st, enq_c, l, 0, c)
+        win = jnp.minimum(st.window[c],
+                          ticks(cfg.max_window_us)).astype(jnp.int32)
+        new_phase = jnp.where(enq_c, QUEUED,
+                              jnp.where(standby, STANDBY, st.phase[c]))
+        new_ready = jnp.where(enq_c, INF,
+                              jnp.where(standby, t + jnp.maximum(win, 0),
+                                        st.t_ready[c]))
+        return st._replace(
+            phase=st.phase.at[c].set(new_phase),
+            t_ready=st.t_ready.at[c].set(new_ready))
+
+    def on_standby_expiry(self, st, cfg, tb, pm, c, t, cond):
+        """Reorder window expired -> enqueue FIFO (Alg.1 line 16)."""
+        l = tb.seg_lock[st.seg[c]]
+        free = jnp.logical_and(st.holder[l] == -1, qlen(st, l, 0) == 0)
+        grab = jnp.logical_and(free, cond)
+        wait = jnp.logical_and(jnp.logical_not(free), cond)
+        st = grant(st, cfg, tb, pm, grab, c, t)
+        st = enq(st, wait, l, 0, c)
+        return park(st, wait, c, QUEUED)
+
+    def on_release(self, st, cfg, tb, pm, c, t, ep_latency, last, cond):
+        """Algorithm 2: AIMD the reorder window (little cores only),
+        against the per-core class SLO (clients.amp_config)."""
+        adjust = jnp.logical_and(jnp.logical_and(last, tb.big[c] == 0),
+                                 cond)
+        w, u = aimd_update(st.window[c], st.unit[c], ep_latency,
+                           pm.slo * tb.slo_scale[c], pct=cfg.pct,
+                           max_window=ticks(cfg.max_window_us))
+        return st._replace(
+            window=st.window.at[c].set(jnp.where(adjust, w, st.window[c])),
+            unit=st.unit.at[c].set(jnp.where(adjust, u, st.unit[c])))
+
+    def pick_next(self, st, cfg, tb, pm, l, t, cond):
+        # FIFO queue first.
+        nonempty = jnp.logical_and(qlen(st, l, 0) > 0, cond)
+        st, cq = deq(st, nonempty, l, 0)
+        st = grant(st, cfg, tb, pm, nonempty, cq, t, wakeup=True)
+        # Queue empty -> a standby competitor may grab the free lock
+        # (Algorithm 1: "when the waiting queue is empty").
+        standby = jnp.logical_and(st.phase == STANDBY,
+                                  tb.seg_lock[st.seg] == l)
+        key, sub = jax.random.split(st.key)
+        pick, any_standby = weighted_pick(sub, jnp.where(standby, 1.0, 0.0))
+        any_standby = jnp.logical_and(
+            jnp.logical_and(jnp.logical_not(nonempty), any_standby), cond)
+        st = st._replace(key=jnp.where(cond, key, st.key))
+        return grant(st, cfg, tb, pm, any_standby, pick, t)

@@ -1,0 +1,48 @@
+"""Static proportional policy (ShflLock-PB analogue, paper Figure 5):
+1 little-core grant after every ``prop_n`` big-core grants."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.policies import register
+from repro.core.policies.base import (LockPolicy, QUEUED, deq, enq, grant,
+                                      park, qlen)
+
+
+@register
+class PropPolicy(LockPolicy):
+    name = "prop"
+    param_slots = ("prop_n",)
+    table_slots = ("big",)
+    state_slots = ("prop_ctr", "q", "q_head", "q_tail")
+    sweep_axes = {"prop_n": "prop_n"}   # built-in SimParams field
+
+    def on_acquire(self, st, cfg, tb, pm, c, t, cond):
+        l = tb.seg_lock[st.seg[c]]
+        is_big = tb.big[c] == 1
+        free = st.holder[l] == -1
+        q_empty = jnp.logical_and(qlen(st, l, 0) == 0, qlen(st, l, 1) == 0)
+        grab = jnp.logical_and(jnp.logical_and(free, q_empty), cond)
+        wait = jnp.logical_and(
+            jnp.logical_not(jnp.logical_and(free, q_empty)), cond)
+        st = grant(st, cfg, tb, pm, grab, c, t)
+        b = jnp.where(is_big, 0, 1)
+        st = enq(st, wait, l, b, c)
+        return park(st, wait, c, QUEUED)
+
+    def pick_next(self, st, cfg, tb, pm, l, t, cond):
+        nb, nl = qlen(st, l, 0), qlen(st, l, 1)
+        take_big = jnp.logical_and(jnp.logical_and(
+            nb > 0, jnp.logical_or(st.prop_ctr[l] < pm.prop_n, nl == 0)),
+            cond)
+        take_little = jnp.logical_and(
+            jnp.logical_and(jnp.logical_not(take_big), nl > 0), cond)
+        st, cb = deq(st, take_big, l, 0)
+        st, cl = deq(st, take_little, l, 1)
+        nxt = jnp.where(take_big, cb, cl)
+        has = jnp.logical_or(take_big, take_little)
+        ctr = jnp.where(take_big, st.prop_ctr[l] + 1,
+                        jnp.where(take_little, 0, st.prop_ctr[l]))
+        st = st._replace(prop_ctr=st.prop_ctr.at[l].set(ctr))
+        return grant(st, cfg, tb, pm, has, nxt, t, wakeup=True)

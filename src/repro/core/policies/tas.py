@@ -1,0 +1,43 @@
+"""Test-and-set with an asymmetric success rate (paper Figure 3b/3c).
+
+The winner among spinners at release is drawn with weight ``w_big`` for
+big cores (w_big > 1 = big-core-affinity, < 1 = little-core-affinity).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policies import register
+from repro.core.policies.base import (SPIN, LockPolicy, grant, park,
+                                      weighted_pick)
+
+
+@register
+class TasPolicy(LockPolicy):
+    name = "tas"
+    param_slots = ("w_big",)
+    table_slots = ("big",)
+    sweep_axes = {"w_big": "w_big"}     # built-in SimParams field
+    host_scheduler = "greedy"
+    host_dispatch = "fast-only"
+
+    def on_acquire(self, st, cfg, tb, pm, c, t, cond):
+        l = tb.seg_lock[st.seg[c]]
+        free = st.holder[l] == -1
+        # Free -> grab; else spin (woken at release by weighted draw).
+        grab = jnp.logical_and(free, cond)
+        spin = jnp.logical_and(jnp.logical_not(free), cond)
+        st = grant(st, cfg, tb, pm, grab, c, t)
+        return park(st, spin, c, SPIN)
+
+    def pick_next(self, st, cfg, tb, pm, l, t, cond):
+        spinning = jnp.logical_and(st.phase == SPIN,
+                                   tb.seg_lock[st.seg] == l)
+        key, sub = jax.random.split(st.key)
+        w = jnp.where(tb.big == 1, pm.w_big, 1.0)
+        winner, any_spin = weighted_pick(sub, jnp.where(spinning, w, 0.0))
+        st = st._replace(key=jnp.where(cond, key, st.key))
+        return grant(st, cfg, tb, pm, jnp.logical_and(any_spin, cond),
+                     winner, t)

@@ -6,22 +6,26 @@ deterministic discrete-event simulation of an AMP: ``N`` cores with per-core
 speed factors run (non-critical section → acquire → critical section →
 release) loops against ``L`` shared locks under a pluggable lock policy.
 
-All paper baselines are modeled:
+Policies are plugins (:mod:`repro.core.policies`): the event loop here is
+policy-agnostic — it looks the policy up in the registry and dispatches
+the ``on_acquire`` / ``on_standby_expiry`` / ``on_release`` / ``pick_next``
+hooks.  Registered out of the box: the paper's baselines ``fifo`` (MCS),
+``tas`` (asymmetric test-and-set), ``prop`` (ShflLock-PB analogue) and
+``libasl`` (the paper's AIMD reorder window), plus ``edf``
+(earliest-deadline grant off the per-core SLO table) and ``shfl``
+(ShflLock-style bounded big-forward shuffling).  ``POLICIES`` ids derive
+from the registry; docs/simulator.md §Adding a lock policy has the
+plugin contract.
 
-* ``fifo``    — MCS-equivalent strict FIFO handoff (Implication 1 baseline).
-* ``tas``     — test-and-set with an *asymmetric success rate*: the winner
-                among spinners at release is drawn with weight ``w_big`` for
-                big cores (w_big>1 = big-core-affinity, <1 = little-core-
-                affinity; paper Figure 3b/3c).
-* ``prop``    — static proportional policy (ShflLock-PB analogue, Figure 5):
-                1 little-core grant after every ``prop_n`` big-core grants.
-* ``libasl``  — the paper: big cores enqueue immediately; little cores stand
-                by for an AIMD-controlled reorder window (Algorithms 1-3).
-
-Event model (one pending event per core):
-  NONCRIT end  → acquire attempt (policy-specific)
-  STANDBY end  → reorder window expired → enqueue FIFO
+Event model (one pending event per core; the phase of the core at the
+head of the event clock selects the handler from the dispatch table):
+  NONCRIT end  → acquire attempt (policy hook)
+  STANDBY end  → reorder window expired (policy hook; only compiled in
+                 for policies that declare ``uses_standby``)
   HOLDER end   → release: record latencies, advance epoch, pick next holder
+  ARRIVAL due  → open-loop mode (``wl_open``): the next request arrives —
+                 start the epoch at its true arrival time, draw the
+                 following arrival from the workload's arrival process
 QUEUED / SPIN cores carry t_ready=INF and are woken by the releaser.
 
 Batched sweep engine (docs/simulator.md):
@@ -58,17 +62,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import aimd, policies
+from repro.core.policies.base import (ARRIVAL, HOLDER, INF, NONCRIT, QUEUED,
+                                      SPIN, STANDBY, US)
+# Queue/grant helpers live next to the policy contract now; the old
+# underscored names stay importable here (tests / downstream callers).
+from repro.core.policies.base import deq as _deq
+from repro.core.policies.base import enq as _enq
+from repro.core.policies.base import grant as _grant
+from repro.core.policies.base import qlen as _qlen
+from repro.core.policies.base import ticks as _ticks
+from repro.core.policies.base import weighted_pick as _weighted_pick
 from repro.dist.hlo_analysis import executable_stats
 from repro.workloads import generators as wlg
 
-# Phases
-NONCRIT, STANDBY, QUEUED, HOLDER, SPIN = 0, 1, 2, 3, 4
-INF = jnp.int32(1 << 30)
-
-POLICIES = {"fifo": 0, "tas": 1, "prop": 2, "libasl": 3}
-
-# 1 tick = 10 ns
-US = 100  # ticks per microsecond
+# name -> stable integer id, derived from the policy registry
+# (registration order; the first four match the pre-registry constants).
+POLICIES = policies.policy_ids()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,6 +127,19 @@ class SimConfig:
     wl: bool = False
     wl_process: str = "poisson"   # ARRIVALS: closed|poisson|mmpp|diurnal
     wl_service: str = "det"       # SERVICES: det|exp|lognormal|bimodal
+    # Open-loop mode (second static workload bit): arrivals are *events*
+    # — each core runs an open queue whose requests arrive at absolute
+    # times drawn from ``wl_process`` (mean gap = wl_rate x the closed-
+    # loop think budget inter+noncrit), independent of completions, and
+    # epoch latency is the full sojourn from arrival (queueing included).
+    # Implies ``wl``; think-scaling is replaced by the pending-ARRIVAL
+    # event (docs/workloads.md §Open-loop simlock).
+    wl_open: bool = False
+    # Per-core service-distribution override (multi-class tenants): a
+    # SERVICES name per core, or None/"" to inherit ``wl_service``.
+    # Rides as the traced ``wl_service`` id column of SimTables, so
+    # mixed-shape cells share one executable (sweepable table axis).
+    wl_service_per_core: tuple = ()
     wl_rate: float = 1.0          # offered load: mean think x= 1/rate
     wl_cv: float = 1.0            # lognormal service cv
     wl_mix: float = 0.0           # bimodal Get/Put long-mode probability
@@ -128,6 +151,11 @@ class SimConfig:
     # Per-core SLO scale (multi-class tenancy; () -> all ones).  Rides
     # traced in SimTables, so mixed-tenant cells share one executable.
     slo_scale: tuple = ()
+    # Policy-owned numeric knobs, as a hashable (name, value) tuple —
+    # read by the registered policy's ``init_params`` into the traced
+    # ``SimParams.pol`` dict (canonicalized out of the jit key), e.g.
+    # ``policy_kw=(("shfl_bound", 8),)`` for the shfl policy.
+    policy_kw: tuple = ()
     # Events retired per lax.scan chunk inside the outer while_loop
     # (amortizes the loop-condition check; results are chunk-invariant —
     # the live-guard in _step retires partial tails as no-ops).  128
@@ -149,6 +177,7 @@ class SimTables(NamedTuple):
     inter: jnp.ndarray     # i32[N] inter-epoch ticks per core
     seg_lock: jnp.ndarray  # i32[S] lock id per segment
     slo_scale: jnp.ndarray  # f32[N] per-core SLO multiplier (multi-class)
+    wl_service: jnp.ndarray  # i32[N] per-core SERVICES id (-1 = inherit)
 
 
 class SimParams(NamedTuple):
@@ -178,6 +207,9 @@ class SimParams(NamedTuple):
     wl_burst_len: jnp.ndarray  # f32 mean epochs per MMPP phase
     wl_amp: jnp.ndarray       # f32 diurnal amplitude
     wl_period: jnp.ndarray    # f32 diurnal period (ticks)
+    # Policy-owned traced knobs (LockPolicy.init_params; {} for the
+    # built-in four) — swept via the policy's declared sweep_axes.
+    pol: dict
 
 
 class SimState(NamedTuple):
@@ -203,10 +235,10 @@ class SimState(NamedTuple):
     cs_lat: jnp.ndarray       # f32[N,EPCAP] acquire->release latencies
     cs_cnt: jnp.ndarray       # i32[N]
     events: jnp.ndarray       # i32
-
-
-def _ticks(us: float) -> int:
-    return int(round(us * US))
+    arr_t: jnp.ndarray        # i32[N] next open-loop arrival (wl_open)
+    # Policy-owned state slots (LockPolicy.init_state; {} for policies
+    # that need none — e.g. shfl's per-lock shuffle counter).
+    pol: dict
 
 
 # --------------------------------------------------------------------------
@@ -226,10 +258,11 @@ def _canon(cfg: SimConfig) -> SimConfig:
         long_epoch_prob=1.0 if cfg.long_epoch_prob > 0.0 else 0.0,
         long_epoch_scale=1.0,
         wakeup_us=1.0 if cfg.wakeup_us > 0.0 else 0.0,
-        wl=bool(cfg.wl), wl_process="poisson", wl_service="det",
+        wl=bool(cfg.wl or cfg.wl_open), wl_open=bool(cfg.wl_open),
+        wl_process="poisson", wl_service="det",
         wl_rate=1.0, wl_cv=1.0, wl_mix=0.0, wl_mix_scale=1.0,
         wl_burst=1.0, wl_burst_len=1.0, wl_amp=0.0, wl_period_us=0.0,
-        slo_scale=())
+        slo_scale=(), wl_service_per_core=(), policy_kw=())
 
 
 def build_tables(cfg: SimConfig) -> SimTables:
@@ -252,11 +285,26 @@ def build_tables(cfg: SimConfig) -> SimTables:
         # would be index-*clamped* inside jit, silently giving high
         # cores the last class's SLO scale.
         slo_scale=jnp.asarray(
-            (tuple(cfg.slo_scale) + (1.0,) * n)[:n], jnp.float32))
+            (tuple(cfg.slo_scale) + (1.0,) * n)[:n], jnp.float32),
+        # -1 = inherit the run-wide SimParams.wl_service id (pad with
+        # inherit for the same clamping reason as slo_scale).
+        wl_service=jnp.asarray(
+            ([-1 if not d else wlg.SERVICES[d]
+              for d in cfg.wl_service_per_core] + [-1] * n)[:n],
+            jnp.int32))
 
 
 def build_params(cfg: SimConfig, slo_us, seed=0, n_active=None) -> SimParams:
     """SimParams from config defaults (each field is a sweep axis)."""
+    pol_params = policies.get(cfg.policy).init_params(cfg)
+    # Every policy_kw key must land in a traced pol slot — a typo'd knob
+    # silently running with its default would be the one misconfiguration
+    # here that doesn't raise.
+    unknown = set(dict(cfg.policy_kw)) - set(pol_params)
+    if unknown:
+        raise ValueError(
+            f"unknown policy_kw {sorted(unknown)} for policy "
+            f"{cfg.policy!r}; known knobs: {sorted(pol_params)}")
     slo = (slo_us * US).astype(jnp.float32) if hasattr(slo_us, "astype") \
         else jnp.float32(_ticks(slo_us))
     return SimParams(
@@ -269,8 +317,8 @@ def build_params(cfg: SimConfig, slo_us, seed=0, n_active=None) -> SimParams:
         long_prob=jnp.float32(cfg.long_epoch_prob),
         long_scale=jnp.float32(cfg.long_epoch_scale),
         wakeup=jnp.int32(_ticks(cfg.wakeup_us)),
-        unit0=jnp.float32(_ticks(cfg.default_window_us)
-                          * (100.0 - cfg.pct) / 100.0),
+        unit0=jnp.float32(aimd.unit_for(_ticks(cfg.default_window_us),
+                                        cfg.pct)),
         wl_process=jnp.int32(wlg.ARRIVALS[cfg.wl_process]),
         wl_service=jnp.int32(wlg.SERVICES[cfg.wl_service]),
         wl_rate=jnp.float32(cfg.wl_rate),
@@ -282,7 +330,8 @@ def build_params(cfg: SimConfig, slo_us, seed=0, n_active=None) -> SimParams:
         wl_amp=jnp.float32(cfg.wl_amp),
         wl_period=jnp.float32(_ticks(
             cfg.wl_period_us if cfg.wl_period_us > 0.0
-            else cfg.sim_time_us)))
+            else cfg.sim_time_us)),
+        pol=pol_params)
 
 
 def _default_windows(cfg: SimConfig) -> np.ndarray:
@@ -305,22 +354,37 @@ def _init_state(cfg: SimConfig, tb: SimTables, pm: SimParams,
             lambda c: wlg.epoch_service_uz(pm.seed, c, 0))(cores)
         u_p = jax.vmap(lambda c: wlg.epoch_phase_u(pm.seed, c, 0))(cores)
         wl_on0 = (u_p < 0.5).astype(jnp.int32)
-        scale0 = wlg.think_gap(u_t, pm.wl_process, pm.wl_rate, wl_on0,
+        think0 = wlg.think_gap(u_t, pm.wl_process, pm.wl_rate, wl_on0,
                                pm.wl_burst, 0.0, pm.wl_amp)
-        svc0 = wlg.service_unit(u_s, z_s, pm.wl_service, pm.wl_cv,
+        svc0 = wlg.service_unit(u_s, z_s, _svc_dist(tb, pm), pm.wl_cv,
                                 pm.wl_mix, pm.wl_mix_scale)
+        scale0 = jnp.ones(n, jnp.float32) if cfg.wl_open else think0
         nc0 = (tb.nc_dur[:, 0].astype(jnp.float32)
                * scale0).astype(jnp.int32)
     else:
         wl_on0 = jnp.zeros(n, jnp.int32)
-        scale0 = jnp.ones(n, jnp.float32)
+        think0 = scale0 = jnp.ones(n, jnp.float32)
         svc0 = jnp.ones(n, jnp.float32)
         nc0 = tb.nc_dur[:, 0]
+    if cfg.wl_open:
+        # Open-loop: every core starts parked on its pending-ARRIVAL
+        # event.  Arrival 0 is drawn from the same think stream a
+        # closed-loop run would consume (gap base = the closed-loop
+        # think budget inter+noncrit); the stagger keeps clock ties off
+        # core 0 exactly as in closed-loop mode.
+        base = (tb.inter + tb.nc_dur[:, 0]).astype(jnp.float32)
+        arr0 = jnp.maximum((base * think0).astype(jnp.int32), 1) + stagger
+        phase0 = jnp.full(n, ARRIVAL, jnp.int32)
+        ready0 = jnp.where(active, arr0, INF)
+    else:
+        arr0 = jnp.zeros(n, jnp.int32)
+        phase0 = jnp.zeros(n, jnp.int32)
+        ready0 = jnp.where(active, nc0 + stagger, INF)
     return SimState(
         t=jnp.int32(0),
         key=jax.random.PRNGKey(pm.seed),
-        phase=jnp.zeros(n, jnp.int32),
-        t_ready=jnp.where(active, nc0 + stagger, INF),
+        phase=phase0,
+        t_ready=ready0,
         seg=jnp.zeros(n, jnp.int32),
         epoch_start=jnp.zeros(n, jnp.int32),
         attempt_t=jnp.zeros(n, jnp.int32),
@@ -339,6 +403,8 @@ def _init_state(cfg: SimConfig, tb: SimTables, pm: SimParams,
         cs_lat=jnp.zeros((n, cap), jnp.float32),
         cs_cnt=jnp.zeros(n, jnp.int32),
         events=jnp.int32(0),
+        arr_t=arr0,
+        pol=policies.get(cfg.policy).init_state(cfg, tb, pm),
     )
 
 
@@ -348,48 +414,6 @@ def init_state(cfg: SimConfig, seed: int = 0, windows0=None) -> SimState:
     pm = build_params(cfg, 0.0, seed)
     w0 = _default_windows(cfg) if windows0 is None else windows0
     return _init_state(cfg, tb, pm, w0)
-
-
-# --------------------------------------------------------------------------
-# Queue helpers (ring buffers). All conditional: ops are no-ops when !cond.
-# --------------------------------------------------------------------------
-
-def _enq(st: SimState, cond, l, b, c) -> SimState:
-    n = st.q.shape[-1]
-    pos = st.q_tail[l, b] % n
-    val = jnp.where(cond, c, st.q[l, b, pos])
-    q = st.q.at[l, b, pos].set(val)
-    q_tail = st.q_tail.at[l, b].add(jnp.where(cond, 1, 0))
-    return st._replace(q=q, q_tail=q_tail)
-
-
-def _deq(st: SimState, cond, l, b):
-    """Returns (st, core) — core = -1 when !cond or empty."""
-    n = st.q.shape[-1]
-    nonempty = st.q_tail[l, b] > st.q_head[l, b]
-    do = jnp.logical_and(cond, nonempty)
-    pos = st.q_head[l, b] % n
-    c = jnp.where(do, st.q[l, b, pos], -1)
-    q_head = st.q_head.at[l, b].add(jnp.where(do, 1, 0))
-    return st._replace(q_head=q_head), c
-
-
-def _qlen(st: SimState, l, b):
-    return st.q_tail[l, b] - st.q_head[l, b]
-
-
-def _weighted_pick(key, weights):
-    """Draw an index ~ weights with ONE scalar uniform (shape-independent:
-    zero-weight padding entries never win and never perturb the draw, so a
-    padded-core run is bit-identical to the unpadded one).  The total is
-    cum[-1], NOT jnp.sum: a differently-ordered reduce could land one ulp
-    above the cumsum, letting u fall past every threshold and "pick" a
-    zero-weight index."""
-    cum = jnp.cumsum(weights)
-    total = cum[-1]
-    u = jax.random.uniform(key) * total
-    pick = jnp.argmax(cum > u).astype(jnp.int32)
-    return pick, total > 0.0
 
 
 # --------------------------------------------------------------------------
@@ -403,113 +427,27 @@ def _weighted_pick(key, weights):
 # select-over-every-branch full-state copies.
 # ``cond`` must only be combined via logical_and/where (it may be the
 # Python literal True on the switch path).
+#
+# Policy decisions live in repro.core.policies plugins; the handlers here
+# are policy-agnostic (they dispatch the registry hooks — no policy-name
+# branches).  Queue/grant/pick helpers are shared with the policies via
+# repro.core.policies.base (re-exported above under their old names).
 # --------------------------------------------------------------------------
 
-def _grant(st: SimState, cfg: SimConfig, tb: SimTables, pm: SimParams,
-           cond, c, t, wakeup=False) -> SimState:
-    """Make core c (if cond) the holder of its lock; schedule its release.
-    ``wakeup=True`` models a blocking lock's parked-waiter handoff latency
-    (Bench-6): only queue-pop handoffs pay it, spinners/standbys do not."""
-    c_safe = jnp.maximum(c, 0)
-    l = tb.seg_lock[st.seg[c_safe]]
-    dur = tb.cs_dur[c_safe, st.seg[c_safe]]
-    if cfg.wl:
-        # Current-epoch service multiplier (drawn at the last epoch end);
-        # floor at 1 tick so a heavy-tailed draw can't create a 0-length
-        # critical section.
-        dur = jnp.maximum((dur.astype(jnp.float32)
-                           * st.svc_scale[c_safe]).astype(jnp.int32), 1)
-    if wakeup and cfg.wakeup_us > 0.0:
-        dur = dur + pm.wakeup
-    holder = st.holder.at[l].set(jnp.where(cond, c_safe, st.holder[l]))
-    phase = st.phase.at[c_safe].set(
-        jnp.where(cond, HOLDER, st.phase[c_safe]))
-    t_ready = st.t_ready.at[c_safe].set(
-        jnp.where(cond, t + dur, st.t_ready[c_safe]))
-    return st._replace(holder=holder, phase=phase, t_ready=t_ready)
+def _svc_dist(tb: SimTables, pm: SimParams, c=None):
+    """Effective SERVICES id: the per-core table override (multi-class
+    tenants), falling back to the run-wide traced id."""
+    per_core = tb.wl_service if c is None else tb.wl_service[c]
+    return jnp.where(per_core >= 0, per_core, pm.wl_service)
 
 
 def _handle_acquire(st: SimState, cfg: SimConfig, tb: SimTables,
                     pm: SimParams, c, t, cond) -> SimState:
-    l = tb.seg_lock[st.seg[c]]
+    """A core's non-critical section ended: record the attempt time and
+    let the policy decide grab / queue / standby / spin."""
     st = st._replace(attempt_t=st.attempt_t.at[c].set(
         jnp.where(cond, t, st.attempt_t[c])))
-    is_big = tb.big[c] == 1
-    free = st.holder[l] == -1
-
-    if cfg.policy == "tas":
-        # Free -> grab; else spin (woken at release by weighted draw).
-        grab = jnp.logical_and(free, cond)
-        spin = jnp.logical_and(jnp.logical_not(free), cond)
-        st = _grant(st, cfg, tb, pm, grab, c, t)
-        st = st._replace(
-            phase=st.phase.at[c].set(jnp.where(spin, SPIN, st.phase[c])),
-            t_ready=st.t_ready.at[c].set(
-                jnp.where(spin, INF, st.t_ready[c])))
-        return st
-
-    if cfg.policy == "prop":
-        q_empty = jnp.logical_and(_qlen(st, l, 0) == 0, _qlen(st, l, 1) == 0)
-        grab = jnp.logical_and(jnp.logical_and(free, q_empty), cond)
-        wait = jnp.logical_and(jnp.logical_not(jnp.logical_and(free, q_empty)),
-                               cond)
-        st = _grant(st, cfg, tb, pm, grab, c, t)
-        b = jnp.where(is_big, 0, 1)
-        st = _enq(st, wait, l, b, c)
-        st = st._replace(
-            phase=st.phase.at[c].set(jnp.where(wait, QUEUED, st.phase[c])),
-            t_ready=st.t_ready.at[c].set(
-                jnp.where(wait, INF, st.t_ready[c])))
-        return st
-
-    if cfg.policy == "libasl":
-        q_empty = _qlen(st, l, 0) == 0
-        can_grab = jnp.logical_and(free, q_empty)
-        grab = jnp.logical_and(can_grab, cond)
-        # Big cores: lock_immediately == FIFO enqueue. Little: standby.
-        wait = jnp.logical_and(jnp.logical_not(can_grab), cond)
-        enq = jnp.logical_and(wait, is_big)
-        standby = jnp.logical_and(wait, jnp.logical_not(is_big))
-        st = _grant(st, cfg, tb, pm, grab, c, t)
-        st = _enq(st, enq, l, 0, c)
-        win = jnp.minimum(st.window[c],
-                          _ticks(cfg.max_window_us)).astype(jnp.int32)
-        new_phase = jnp.where(enq, QUEUED,
-                              jnp.where(standby, STANDBY, st.phase[c]))
-        new_ready = jnp.where(enq, INF,
-                              jnp.where(standby, t + jnp.maximum(win, 0),
-                                        st.t_ready[c]))
-        st = st._replace(
-            phase=st.phase.at[c].set(new_phase),
-            t_ready=st.t_ready.at[c].set(new_ready))
-        return st
-
-    # fifo (MCS)
-    q_empty = _qlen(st, l, 0) == 0
-    grab = jnp.logical_and(jnp.logical_and(free, q_empty), cond)
-    wait = jnp.logical_and(jnp.logical_not(jnp.logical_and(free, q_empty)),
-                           cond)
-    st = _grant(st, cfg, tb, pm, grab, c, t)
-    st = _enq(st, wait, l, 0, c)
-    st = st._replace(
-        phase=st.phase.at[c].set(jnp.where(wait, QUEUED, st.phase[c])),
-        t_ready=st.t_ready.at[c].set(jnp.where(wait, INF, st.t_ready[c])))
-    return st
-
-
-def _handle_standby_expiry(st: SimState, cfg: SimConfig, tb: SimTables,
-                           pm: SimParams, c, t, cond) -> SimState:
-    """LibASL little core: reorder window expired -> enqueue FIFO (Alg.1 l.16)."""
-    l = tb.seg_lock[st.seg[c]]
-    free = jnp.logical_and(st.holder[l] == -1, _qlen(st, l, 0) == 0)
-    grab = jnp.logical_and(free, cond)
-    wait = jnp.logical_and(jnp.logical_not(free), cond)
-    st = _grant(st, cfg, tb, pm, grab, c, t)
-    st = _enq(st, wait, l, 0, c)
-    st = st._replace(
-        phase=st.phase.at[c].set(jnp.where(wait, QUEUED, st.phase[c])),
-        t_ready=st.t_ready.at[c].set(jnp.where(wait, INF, st.t_ready[c])))
-    return st
+    return policies.get(cfg.policy).on_acquire(st, cfg, tb, pm, c, t, cond)
 
 
 def _record(buf, cnt, c, value, cond):
@@ -519,61 +457,42 @@ def _record(buf, cnt, c, value, cond):
     return buf.at[c, pos].set(val), cnt.at[c].add(jnp.where(cond, 1, 0))
 
 
-def _pick_next(st: SimState, cfg: SimConfig, tb: SimTables, pm: SimParams,
-               l, t, cond) -> SimState:
-    """Select & grant the next holder of lock l after a release (if cond).
-    The caller has already cleared the holder; an unsuccessful pick leaves
-    the lock free."""
-    if cfg.policy == "tas":
-        spinning = jnp.logical_and(st.phase == SPIN, tb.seg_lock[st.seg] == l)
-        key, sub = jax.random.split(st.key)
-        w = jnp.where(tb.big == 1, pm.w_big, 1.0)
-        winner, any_spin = _weighted_pick(sub, jnp.where(spinning, w, 0.0))
-        st = st._replace(key=jnp.where(cond, key, st.key))
-        st = _grant(st, cfg, tb, pm, jnp.logical_and(any_spin, cond),
-                    winner, t)
-        return st
+def _handle_arrival(st: SimState, cfg: SimConfig, tb: SimTables,
+                    pm: SimParams, c, t, cond) -> SimState:
+    """Open-loop mode (``wl_open``): the pending-ARRIVAL event fired.
 
-    if cfg.policy == "prop":
-        nb, nl = _qlen(st, l, 0), _qlen(st, l, 1)
-        take_big = jnp.logical_and(jnp.logical_and(
-            nb > 0, jnp.logical_or(st.prop_ctr[l] < pm.prop_n, nl == 0)),
-            cond)
-        take_little = jnp.logical_and(
-            jnp.logical_and(jnp.logical_not(take_big), nl > 0), cond)
-        st, cb = _deq(st, take_big, l, 0)
-        st, cl = _deq(st, take_little, l, 1)
-        nxt = jnp.where(take_big, cb, cl)
-        has = jnp.logical_or(take_big, take_little)
-        ctr = jnp.where(take_big, st.prop_ctr[l] + 1,
-                        jnp.where(take_little, 0, st.prop_ctr[l]))
-        st = st._replace(prop_ctr=st.prop_ctr.at[l].set(ctr))
-        st = _grant(st, cfg, tb, pm, has, nxt, t, wakeup=True)
-        return st
-
-    # fifo & libasl: FIFO queue first.
-    nonempty = jnp.logical_and(_qlen(st, l, 0) > 0, cond)
-    st, cq = _deq(st, nonempty, l, 0)
-    st = _grant(st, cfg, tb, pm, nonempty, cq, t, wakeup=True)
-
-    if cfg.policy == "libasl":
-        # Queue empty -> a standby competitor may grab the free lock
-        # (Algorithm 1: "when the waiting queue is empty").
-        standby = jnp.logical_and(st.phase == STANDBY,
-                                  tb.seg_lock[st.seg] == l)
-        key, sub = jax.random.split(st.key)
-        pick, any_standby = _weighted_pick(sub, jnp.where(standby, 1.0, 0.0))
-        any_standby = jnp.logical_and(
-            jnp.logical_and(jnp.logical_not(nonempty), any_standby), cond)
-        st = st._replace(key=jnp.where(cond, key, st.key))
-        st = _grant(st, cfg, tb, pm, any_standby, pick, t)
-        return st
-
-    return st
+    Begin the epoch at its *true* arrival time ``arr_t[c]`` (which may be
+    in the past when the core is backlogged — epoch latency then includes
+    the queueing delay, the open-loop load-latency knee), and draw the
+    next arrival gap from the workload's arrival process.  Draws are
+    counter-pure in (seed, core, arrival index), so sweeps, sharding and
+    event interleaving cannot perturb the arrival stream."""
+    a = st.arr_t[c]
+    nxt_ix = st.ep_cnt[c] + 1          # arrivals consumed so far + 1
+    u_t = wlg.epoch_think_u(pm.seed, c, nxt_ix)
+    u_p = wlg.epoch_phase_u(pm.seed, c, nxt_ix)
+    on = wlg.phase_flip(u_p, st.wl_on[c], pm.wl_burst_len)
+    phase01 = jnp.mod(t.astype(jnp.float32)
+                      / jnp.maximum(pm.wl_period, 1.0), 1.0)
+    gap = wlg.think_gap(u_t, pm.wl_process, pm.wl_rate, on,
+                        pm.wl_burst, phase01, pm.wl_amp)
+    base = (tb.inter[c] + tb.nc_dur[c, 0]).astype(jnp.float32)
+    nxt = a + jnp.maximum((base * gap).astype(jnp.int32), 1)
+    nc0 = (tb.nc_dur[c, 0].astype(jnp.float32)
+           * st.scale[c]).astype(jnp.int32)
+    return st._replace(
+        arr_t=st.arr_t.at[c].set(jnp.where(cond, nxt, st.arr_t[c])),
+        wl_on=st.wl_on.at[c].set(jnp.where(cond, on, st.wl_on[c])),
+        epoch_start=st.epoch_start.at[c].set(
+            jnp.where(cond, a, st.epoch_start[c])),
+        phase=st.phase.at[c].set(jnp.where(cond, NONCRIT, st.phase[c])),
+        t_ready=st.t_ready.at[c].set(
+            jnp.where(cond, t + nc0, st.t_ready[c])))
 
 
 def _handle_release(st: SimState, cfg: SimConfig, tb: SimTables,
                     pm: SimParams, c, t, cond) -> SimState:
+    pol = policies.get(cfg.policy)
     s = st.seg[c]
     l = tb.seg_lock[s]
     n_seg = len(cfg.seg_cs_us)
@@ -584,23 +503,14 @@ def _handle_release(st: SimState, cfg: SimConfig, tb: SimTables,
     st = st._replace(cs_lat=cs_lat, cs_cnt=cs_cnt)
 
     last = s == n_seg - 1
-    # Epoch end: record latency, AIMD-update the window (little cores only).
+    # Epoch end: record latency; the policy runs its feedback (e.g.
+    # LibASL's AIMD window update — little cores only).
     ep_latency = (t - st.epoch_start[c]).astype(jnp.float32)
     ep_lat, ep_cnt = _record(st.ep_lat, st.ep_cnt, c, ep_latency,
                              jnp.logical_and(last, cond))
     st = st._replace(ep_lat=ep_lat, ep_cnt=ep_cnt)
 
-    if cfg.policy == "libasl":
-        adjust = jnp.logical_and(jnp.logical_and(last, tb.big[c] == 0), cond)
-        # Per-core SLO scale: multi-class tenants (clients.amp_config)
-        # each track their own SLO; the default table is all-ones.
-        violated = ep_latency > pm.slo * tb.slo_scale[c]
-        w = jnp.where(violated, st.window[c] * 0.5, st.window[c])
-        u = jnp.where(violated, w * (100.0 - cfg.pct) / 100.0, st.unit[c])
-        w = jnp.clip(w + u, 0.0, _ticks(cfg.max_window_us))
-        st = st._replace(
-            window=st.window.at[c].set(jnp.where(adjust, w, st.window[c])),
-            unit=st.unit.at[c].set(jnp.where(adjust, u, st.unit[c])))
+    st = pol.on_release(st, cfg, tb, pm, c, t, ep_latency, last, cond)
 
     # Sample the next epoch's workload: the Bench-3 long-epoch mix and/or
     # the repro.workloads stochastic model.  Both are statically gated on
@@ -620,22 +530,26 @@ def _handle_release(st: SimState, cfg: SimConfig, tb: SimTables,
         # (generators.epoch_scale_tables).  st.ep_cnt[c] was already
         # bumped above, so it is the *next* epoch's index.
         ep = st.ep_cnt[c]
-        u_t = wlg.epoch_think_u(pm.seed, c, ep)
         u_s, z_s = wlg.epoch_service_uz(pm.seed, c, ep)
-        u_p = wlg.epoch_phase_u(pm.seed, c, ep)
-        on = wlg.phase_flip(u_p, st.wl_on[c], pm.wl_burst_len)
-        phase01 = jnp.mod(t.astype(jnp.float32)
-                          / jnp.maximum(pm.wl_period, 1.0), 1.0)
-        think = wlg.think_gap(u_t, pm.wl_process, pm.wl_rate, on,
-                              pm.wl_burst, phase01, pm.wl_amp)
-        svc = wlg.service_unit(u_s, z_s, pm.wl_service, pm.wl_cv,
+        svc = wlg.service_unit(u_s, z_s, _svc_dist(tb, pm, c), pm.wl_cv,
                                pm.wl_mix, pm.wl_mix_scale)
-        new_scale = think if new_scale is None else new_scale * think
         upd = jnp.logical_and(last, cond)
-        st = st._replace(
-            wl_on=st.wl_on.at[c].set(jnp.where(upd, on, st.wl_on[c])),
-            svc_scale=st.svc_scale.at[c].set(
-                jnp.where(upd, svc, st.svc_scale[c])))
+        st = st._replace(svc_scale=st.svc_scale.at[c].set(
+            jnp.where(upd, svc, st.svc_scale[c])))
+        if not cfg.wl_open:
+            # Closed loop: the think draw scales the next epoch's
+            # non-critical segments.  (Open loop consumes the think
+            # stream in _handle_arrival instead — as arrival gaps.)
+            u_t = wlg.epoch_think_u(pm.seed, c, ep)
+            u_p = wlg.epoch_phase_u(pm.seed, c, ep)
+            on = wlg.phase_flip(u_p, st.wl_on[c], pm.wl_burst_len)
+            phase01 = jnp.mod(t.astype(jnp.float32)
+                              / jnp.maximum(pm.wl_period, 1.0), 1.0)
+            think = wlg.think_gap(u_t, pm.wl_process, pm.wl_rate, on,
+                                  pm.wl_burst, phase01, pm.wl_amp)
+            new_scale = think if new_scale is None else new_scale * think
+            st = st._replace(
+                wl_on=st.wl_on.at[c].set(jnp.where(upd, on, st.wl_on[c])))
     if new_scale is not None:
         scale_c = jnp.where(jnp.logical_and(last, cond), new_scale,
                             st.scale[c])
@@ -647,28 +561,55 @@ def _handle_release(st: SimState, cfg: SimConfig, tb: SimTables,
         def _sc(d):
             return d
 
-    # Advance the program: next segment, or inter-epoch gap then segment 0.
+    # Advance the program: next segment, or — epoch done — the closed-loop
+    # think gap (inter-epoch + segment-0 noncrit), or the open-loop
+    # pending-ARRIVAL event at the next arrival (possibly already past).
     s_next = jnp.where(last, 0, s + 1)
-    ep_start_next = jnp.where(last, t + _sc(tb.inter[c]), st.epoch_start[c])
-    ready = jnp.where(last,
-                      t + _sc(tb.inter[c]) + _sc(tb.nc_dur[c, 0]),
-                      t + _sc(tb.nc_dur[c, jnp.minimum(s + 1, n_seg - 1)]))
+    mid_ready = t + _sc(tb.nc_dur[c, jnp.minimum(s + 1, n_seg - 1)])
+    if cfg.wl_open:
+        ep_start_next = st.epoch_start[c]      # set by _handle_arrival
+        ready = jnp.where(last, jnp.maximum(t, st.arr_t[c]), mid_ready)
+        phase_next = jnp.where(last, ARRIVAL, NONCRIT)
+    else:
+        ep_start_next = jnp.where(last, t + _sc(tb.inter[c]),
+                                  st.epoch_start[c])
+        ready = jnp.where(last,
+                          t + _sc(tb.inter[c]) + _sc(tb.nc_dur[c, 0]),
+                          mid_ready)
+        phase_next = jnp.int32(NONCRIT)
     st = st._replace(
         seg=st.seg.at[c].set(jnp.where(cond, s_next, st.seg[c])),
         epoch_start=st.epoch_start.at[c].set(
             jnp.where(cond, ep_start_next, st.epoch_start[c])),
-        phase=st.phase.at[c].set(jnp.where(cond, NONCRIT, st.phase[c])),
+        phase=st.phase.at[c].set(jnp.where(cond, phase_next, st.phase[c])),
         t_ready=st.t_ready.at[c].set(jnp.where(cond, ready, st.t_ready[c])))
 
     # Hand the lock over.
     st = st._replace(holder=st.holder.at[l].set(
         jnp.where(cond, -1, st.holder[l])))
-    return _pick_next(st, cfg, tb, pm, l, t, cond)
+    return pol.pick_next(st, cfg, tb, pm, l, t, cond)
 
 
 # --------------------------------------------------------------------------
 # Main loop
 # --------------------------------------------------------------------------
+
+def _dispatch_table(cfg: SimConfig):
+    """Phase id -> handler, built per trace from the registry policy.
+
+    The table is the single source of event dispatch for both step modes:
+    phases a config cannot reach (STANDBY without ``uses_standby``,
+    ARRIVAL without ``wl_open``) are simply absent, so their handlers
+    never enter the compiled HLO."""
+    pol = policies.get(cfg.policy)
+    table = [(NONCRIT, _handle_acquire), (HOLDER, _handle_release)]
+    if pol.uses_standby:
+        table.append((STANDBY, lambda st, cfg, tb, pm, c, t, cond:
+                      pol.on_standby_expiry(st, cfg, tb, pm, c, t, cond)))
+    if cfg.wl_open:
+        table.append((ARRIVAL, _handle_arrival))
+    return table
+
 
 def _step(cfg: SimConfig, tb: SimTables, pm: SimParams, horizon,
           st: SimState, masked: bool) -> SimState:
@@ -684,29 +625,17 @@ def _step(cfg: SimConfig, tb: SimTables, pm: SimParams, horizon,
     live = jnp.logical_and(t < horizon, st.events < cfg.max_events)
     st = st._replace(t=jnp.where(live, t, st.t),
                      events=st.events + jnp.where(live, 1, 0))
+    table = _dispatch_table(cfg)
 
     if masked:
         ph = st.phase[c]
-        st = _handle_acquire(st, cfg, tb, pm, c, t,
-                             jnp.logical_and(live, ph == NONCRIT))
-        if cfg.policy == "libasl":   # STANDBY is unreachable elsewhere
-            st = _handle_standby_expiry(st, cfg, tb, pm, c, t,
-                                        jnp.logical_and(live, ph == STANDBY))
-        st = _handle_release(st, cfg, tb, pm, c, t,
-                             jnp.logical_and(live, ph == HOLDER))
+        for phase, fn in table:
+            st = fn(st, cfg, tb, pm, c, t,
+                    jnp.logical_and(live, ph == phase))
         # QUEUED/SPIN at the head of the clock: defensive re-park.
         park = jnp.logical_and(live, jnp.logical_or(ph == QUEUED, ph == SPIN))
         return st._replace(t_ready=st.t_ready.at[c].set(
             jnp.where(park, INF, st.t_ready[c])))
-
-    def acq(s):
-        return _handle_acquire(s, cfg, tb, pm, c, t, True)
-
-    def standby(s):
-        return _handle_standby_expiry(s, cfg, tb, pm, c, t, True)
-
-    def rel(s):
-        return _handle_release(s, cfg, tb, pm, c, t, True)
 
     def noop(s):
         return s._replace(t_ready=s.t_ready.at[c].set(INF))
@@ -714,8 +643,15 @@ def _step(cfg: SimConfig, tb: SimTables, pm: SimParams, horizon,
     def dead(s):
         return s
 
-    branch = jnp.where(live, st.phase[c], 5)
-    return jax.lax.switch(branch, [acq, standby, noop, rel, noop, dead], st)
+    def bind(fn):
+        return lambda s: fn(s, cfg, tb, pm, c, t, True)
+
+    by_phase = dict(table)
+    n_phases = ARRIVAL + 1
+    branches = [bind(by_phase[p]) if p in by_phase else noop
+                for p in range(n_phases)] + [dead]
+    branch = jnp.where(live, st.phase[c], n_phases)
+    return jax.lax.switch(branch, branches, st)
 
 
 def _simulate(cfg: SimConfig, tb: SimTables, pm: SimParams,
@@ -862,8 +798,16 @@ _WL_AXES = ("arrival_rate", "cv", "mix", "mix_scale", "burstiness",
             "burst_len")
 # axis name -> SimConfig field rebuilt through build_tables per cell
 _TABLE_AXES = ("seg_noncrit_us", "seg_cs_us", "seg_lock", "inter_epoch_us",
-               "big", "speed_cs", "speed_nc", "slo_scale")
+               "big", "speed_cs", "speed_nc", "slo_scale",
+               "wl_service_per_core")
 SWEEPABLE = tuple(_PARAM_AXES) + _TABLE_AXES + ("window0_us",)
+
+
+def sweepable_axes(cfg: SimConfig) -> tuple:
+    """All sweep axes valid for ``cfg`` — the engine's plus the
+    registered policy's declared ``sweep_axes``."""
+    return SWEEPABLE + tuple(
+        a for a in policies.get(cfg.policy).sweep_axes if a not in SWEEPABLE)
 
 
 def _cell_params(cfg: SimConfig, cell: dict, slo_us, seed) -> SimParams:
@@ -888,7 +832,13 @@ def _cell_params(cfg: SimConfig, cell: dict, slo_us, seed) -> SimParams:
         # A swept initial window plays the role of default_window_us (the
         # seed's LibASL-MAX cells set both), so the unit floor follows it.
         pm = pm._replace(unit0=jnp.float32(
-            _ticks(cell["window0_us"]) * (100.0 - cfg.pct) / 100.0))
+            aimd.unit_for(_ticks(cell["window0_us"]), cfg.pct)))
+    # Policy-declared axes land in the traced SimParams.pol slots (the
+    # built-in fields above are already covered by _PARAM_AXES).
+    for axis, slot in policies.get(cfg.policy).sweep_axes.items():
+        if axis in cell and slot in pm.pol:
+            pm = pm._replace(pol=dict(pm.pol, **{
+                slot: jnp.asarray(cell[axis], pm.pol[slot].dtype)}))
     return pm
 
 
@@ -918,10 +868,11 @@ def sweep(cfg: SimConfig, axes: dict, *, slo_us=1e9, seed=0,
     """
     if not axes:
         raise ValueError("empty sweep: pass at least one axis")
+    allowed = sweepable_axes(cfg)
     for name in axes:
-        if name not in SWEEPABLE:
+        if name not in allowed:
             raise ValueError(f"unknown sweep axis {name!r}; "
-                             f"sweepable: {SWEEPABLE}")
+                             f"sweepable: {allowed}")
     # Sweeping a statically-gated feature must switch its gate on in the
     # template config (the gate is part of the canonical jit key).
     for gate in ("long_epoch_prob", "wakeup_us"):

@@ -22,7 +22,8 @@ import threading
 
 import numpy as np
 
-from repro.core.aimd import AIMDWindow
+from repro.core.aimd import AIMDWindow, unit_for
+from repro.workloads.generators import straggle_uniforms
 
 
 class BoundedStalenessController:
@@ -42,7 +43,7 @@ class BoundedStalenessController:
         self.max_window = float(max_window)
         self._aimd = AIMDWindow(
             window=float(window_steps),
-            unit=float(window_steps) * (100.0 - pct) / 100.0,
+            unit=unit_for(float(window_steps), pct),
             pct=pct, max_window=self.max_window)
         self.steps = [0] * n_pods
         self._lock = threading.Lock()
@@ -91,19 +92,31 @@ def simulate(n_pods: int, durations, *, controller: BoundedStalenessController,
 
     Returns ``(steps_per_s, mean_staleness, p99_staleness)`` — staleness
     sampled at every commit.
+
+    Straggle draws are counter-based (``repro.workloads.generators``):
+    pod ``p``'s step ``k`` straggles iff its uniform — pure in
+    ``(seed, p, k)`` — lands under ``straggle_prob``, so the straggler
+    pattern is identical across horizons, controllers and commit
+    interleavings (no sequential RNG state).
     """
-    rng = np.random.default_rng(seed)
     INF = float("inf")
     t = 0.0
     finish = [INF] * n_pods          # completion time of the in-flight step
     blocked = [False] * n_pods
     staleness_samples: list[int] = []
     commits = 0
+    # A pod can start at most one step per global commit, plus its final
+    # in-flight step — horizon_steps + 1 draws bound every pod.
+    u = [straggle_uniforms(seed, p, horizon_steps + 1)
+         for p in range(n_pods)] if straggle_prob > 0.0 else None
+    started = [0] * n_pods
 
     def step_duration(p: int) -> float:
         d = float(durations[p])
-        if straggle_prob > 0.0 and rng.random() < straggle_prob:
-            d *= straggle_factor
+        if straggle_prob > 0.0:
+            if u[p][started[p]] < straggle_prob:
+                d *= straggle_factor
+            started[p] += 1
         return d
 
     def try_start(p: int):

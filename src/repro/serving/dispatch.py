@@ -26,11 +26,17 @@ import heapq
 
 import numpy as np
 
-from repro.core.aimd import AIMDWindow
+from repro.core.aimd import AIMDWindow, unit_for
+from repro.core.policies import dispatch_names
 from repro.workloads import traces as wl_traces
 from repro.workloads.generators import (LEGACY_LOGNORMAL_CV,
                                         LEGACY_LOGNORMAL_MEAN, ArrivalSpec,
                                         ServiceSpec)
+
+# Fleet-dispatch policy names, keyed off the lock-policy registry (each
+# LockPolicy's host_dispatch: fifo -> "fair" round-robin, tas
+# big-affinity -> "fast-only", libasl -> "asl" window spill).
+DISPATCH_POLICIES = dispatch_names()
 
 
 @dataclasses.dataclass
@@ -65,6 +71,9 @@ def simulate_dispatch(policy: str, *, n_fast=4, n_slow=4, slow_factor=3.0,
     generate one (default: open-loop Poisson arrivals + the legacy
     lognormal service shape) — deterministic per ``seed``.
     """
+    if policy not in DISPATCH_POLICIES:
+        raise ValueError(f"unknown dispatch policy {policy!r}; "
+                         f"registered: {DISPATCH_POLICIES}")
     if trace is None:
         trace = wl_traces.generate(
             arrival or ArrivalSpec("poisson", rate_rps),
@@ -75,7 +84,7 @@ def simulate_dispatch(policy: str, *, n_fast=4, n_slow=4, slow_factor=3.0,
     fast = [Replica(1.0) for _ in range(n_fast)]
     slow = [Replica(slow_factor) for _ in range(n_slow)]
     win = AIMDWindow(window=default_window,
-                     unit=default_window * (100 - pct) / 100, pct=pct,
+                     unit=unit_for(default_window, pct), pct=pct,
                      max_window=max_window)
     arrivals = list(zip(trace.arrival_t.tolist(),
                         trace.service_s.tolist()))

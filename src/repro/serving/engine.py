@@ -30,8 +30,7 @@ import itertools
 
 import numpy as np
 
-from repro.core.asl_schedule import (ASLScheduler, FIFOScheduler,
-                                     GreedyScheduler)
+from repro.core.asl_schedule import SCHEDULERS
 
 
 @dataclasses.dataclass
@@ -66,9 +65,12 @@ class ServingEngine:
         self.cost = cost or CostModel()
         self.clock = 0.0
         kw = dict(scheduler_kwargs or {})
-        mk = {"fifo": FIFOScheduler, "greedy": GreedyScheduler,
-              "asl": ASLScheduler}[scheduler]
-        self.sched = mk(clock=lambda: self.clock, **kw)
+        # Scheduler names come from the lock-policy registry (each
+        # LockPolicy's host_scheduler — repro.core.asl_schedule).
+        if scheduler not in SCHEDULERS:
+            raise ValueError(f"unknown scheduler {scheduler!r}; "
+                             f"registered: {sorted(SCHEDULERS)}")
+        self.sched = SCHEDULERS[scheduler](clock=lambda: self.clock, **kw)
         self.sched_name = scheduler
         self.running: list[Request] = []      # decode set
         self.done: list[Request] = []

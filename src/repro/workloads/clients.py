@@ -116,13 +116,24 @@ def amp_config(cfg, mix: WorkloadMix, base_slo: float):
     Maps classes to cores (:func:`assign_cores`) and installs the
     per-core ``slo_scale`` table (class SLO / ``base_slo``) — run the
     result with ``slo_us=base_slo`` and each core's effective SLO is its
-    class's own.  Returns ``(cfg, class_of_core)``.
+    class's own.  A class that declares a non-default :class:`ServiceSpec`
+    additionally installs its service *shape* into the per-core
+    ``wl_service_per_core`` table (big/little tenants with different
+    Get/Put mixes side by side); the shape parameters (``cv`` / ``mix``
+    / ``mix_scale``) stay run-wide traced knobs.  Returns
+    ``(cfg, class_of_core)``.
     """
     assign = assign_cores(mix, cfg.big[:cfg.n_cores])
     scale = tuple(
         float(mix.classes[k].slo / base_slo) if
         math.isfinite(mix.classes[k].slo) else 1e9
         for k in assign)
+    default = ServiceSpec()
+    svc = tuple(mix.classes[k].service.dist
+                if mix.classes[k].service != default else None
+                for k in assign)
+    if any(svc):
+        cfg = dataclasses.replace(cfg, wl_service_per_core=svc)
     return dataclasses.replace(cfg, slo_scale=scale), assign
 
 

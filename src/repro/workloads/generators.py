@@ -47,6 +47,7 @@ STREAM_SERVICE = 0x7782
 STREAM_PHASE = 0x7783
 STREAM_CLASS = 0x7784
 STREAM_COLS = 0x7785
+STREAM_STRAGGLE = 0x7786
 
 
 # --------------------------------------------------------------------------
@@ -221,13 +222,25 @@ def epoch_scale_tables(seed, n_cores: int, n_epochs: int, *, process,
     Returns ``(think, svc)`` — f64[n_cores, n_epochs] think-gap and
     service-unit multipliers, bit-identical to what a ``wl=True``
     ``simlock`` run with the same traced params applies at each core's
-    epoch ``e`` (epoch 0 = the initial draw).  The diurnal ramp is the
-    one process this cannot reproduce (its rate depends on sim *time*,
-    not the epoch counter) — requesting it raises."""
+    epoch ``e`` (epoch 0 = the initial draw).  ``service`` may be one
+    SERVICES name or a per-core sequence of names (the simulator's
+    ``wl_service_per_core`` table — multi-class tenants with different
+    service shapes per core).  The diurnal ramp is the one process this
+    cannot reproduce (its rate depends on sim *time*, not the epoch
+    counter) — requesting it raises."""
     if process == "diurnal":
         raise ValueError("diurnal draws depend on simulated time; only "
                          "counter-pure processes can be reconstructed")
-    pid, sid = ARRIVALS[process], SERVICES[service]
+    pid = ARRIVALS[process]
+    if isinstance(service, str):
+        sid = SERVICES[service]
+    else:
+        if len(service) != n_cores:
+            raise ValueError(f"per-core service list has {len(service)} "
+                             f"entries for {n_cores} cores")
+        # One id per core, broadcast over the epoch axis below.
+        sid = jnp.asarray([SERVICES[s] for s in service],
+                          jnp.int32)[:, None]
     cores = jnp.arange(n_cores, dtype=jnp.int32)
     epochs = jnp.arange(n_epochs, dtype=jnp.int32)
 
@@ -349,6 +362,17 @@ def client_think_gaps(seed, client: int, n: int,
     key = counter_key(stream_key(seed, stream), client)
     u = np.asarray(_block(key, _pad_pow2(n), "uniform"))[:n]
     return -np.log1p(-u.astype(np.float64))
+
+
+def straggle_uniforms(seed, replica: int, n: int,
+                      *, stream: int = STREAM_STRAGGLE) -> np.ndarray:
+    """Straggler-decision uniforms for one replica/pod: element ``i`` is
+    pure in ``(seed, replica, i)`` — the draw for step ``i`` is the same
+    whatever the horizon, the pod count, or the commit interleaving
+    (replaces the straggler sim's last ad-hoc ``np.random`` state)."""
+    key = counter_key(stream_key(seed, stream), replica)
+    u = np.asarray(_block(key, _pad_pow2(n), "uniform"))[:n]
+    return u.astype(np.float64)
 
 
 def choice(values, n: int, seed: int, *, stream: int = STREAM_COLS,

@@ -29,9 +29,14 @@ def test_quickstart_smoke(capsys):
 
 
 def test_lock_microbench_smoke(capsys):
+    from repro.core.policies import REGISTRY
     mb = _load("lock_microbench")
     mb.main(ns=(1, 4), slos=(50.0, 150.0), sim_time_us=1_500.0,
             fracs=(0.5, 2.0))
     out = capsys.readouterr().out
     assert "Figure 1" in out and "Figure 8b" in out
-    assert "Load-latency" in out
+    assert "Load-latency" in out and "Open-loop" in out
+    # every registered policy appears in the matrix section
+    matrix = out.split("== Figure 1")[0]
+    for name in REGISTRY:
+        assert f"\n{name:>8} " in matrix, name

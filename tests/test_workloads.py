@@ -352,3 +352,88 @@ def test_aimd_host_vs_jnp_trajectory_parity(seed, n, slo):
                            pct=99.0, max_window=1e6)
         np.testing.assert_allclose(float(w), host.window, rtol=1e-5)
         np.testing.assert_allclose(float(u), host.unit, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Per-core service distributions (SimTables.wl_service — multi-class
+# tenants with different service shapes side by side)
+# ---------------------------------------------------------------------------
+
+def test_per_core_service_moments():
+    """Big cores run det, little cores bimodal: the reconstructed (and
+    simulator-consumed) per-core service draws must carry each core's
+    own distribution — det exactly 1, bimodal mean-1 with the analytic
+    second moment."""
+    per_core = ("det",) * 4 + ("bimodal",) * 4
+    mix, scale = 0.2, 10.0
+    n_ep = 4000
+    _, svc = wlg.epoch_scale_tables(
+        5, 8, n_ep, process="poisson", rate=1.0, mix=mix,
+        mix_scale=scale, service=list(per_core))
+    assert np.array_equal(svc[:4], np.ones((4, n_ep)))
+    little = svc[4:].ravel()
+    short = 1.0 / ((1.0 - mix) + mix * scale)
+    ex2 = (1.0 - mix) * short ** 2 + mix * (short * scale) ** 2
+    assert np.mean(little) == pytest.approx(1.0, rel=0.05)
+    assert np.mean(little ** 2) == pytest.approx(ex2, rel=0.10)
+    # two-point support (draws are f32; compare at f32 precision)
+    np.testing.assert_allclose(np.unique(little), [short, short * scale],
+                               rtol=1e-6)
+
+
+def test_per_core_service_table_rides_in_sim():
+    """The wl_service column drives the simulator: a det/bimodal split
+    run's final svc_scale matches the per-core host reconstruction, and
+    the default (inherit) table is bit-identical to the scalar path."""
+    cfg = sl.SimConfig(policy="fifo", wl=True, wl_service="exp",
+                       wl_mix=0.3, sim_time_us=4_000.0,
+                       wl_service_per_core=(None,) * 4 + ("bimodal",) * 4)
+    st = sl.run(cfg, 1e9, seed=9)
+    ep = np.asarray(st.ep_cnt)
+    _, svc = wlg.epoch_scale_tables(
+        9, cfg.n_cores, int(ep.max()) + 1, process="poisson", rate=1.0,
+        mix=0.3, service=["exp"] * 4 + ["bimodal"] * 4)
+    got = np.asarray(st.svc_scale)
+    for c in range(cfg.n_cores):
+        np.testing.assert_allclose(got[c], svc[c, ep[c]], rtol=1e-6)
+    # inherit-only table == the scalar wl_service path, exactly
+    plain = sl.run(dataclasses.replace(cfg, wl_service_per_core=()),
+                   1e9, seed=9)
+    explicit = sl.run(dataclasses.replace(
+        cfg, wl_service_per_core=("exp",) * 8), 1e9, seed=9)
+    for x, y in zip(jax.tree.leaves(plain), jax.tree.leaves(explicit)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_per_core_service_is_sweepable_table_axis():
+    """wl_service_per_core sweeps as a table axis — one executable for
+    the mixed-shape grid, cells == dedicated runs."""
+    base = sl.SimConfig(policy="fifo", wl=True, wl_service="det",
+                        sim_time_us=3_000.0)
+    tables = [(None,) * 8, ("bimodal",) * 4 + (None,) * 4]
+    n0 = sl.n_batch_executables()
+    st, grid = sl.sweep(base, {"wl_service_per_core": tables}, slo_us=1e9)
+    assert sl.n_batch_executables() - n0 <= 1
+    for i, tab in enumerate(tables):
+        want = sl.run(dataclasses.replace(base, wl_service_per_core=tab),
+                      1e9)
+        got = jax.tree.map(lambda x, i=i: np.asarray(x)[i], st)
+        assert int(got.events) == int(want.events)
+        np.testing.assert_allclose(np.asarray(got.svc_scale),
+                                   np.asarray(want.svc_scale), rtol=1e-9)
+
+
+def test_amp_config_installs_per_core_service():
+    mix = WorkloadMix((
+        ClientClass("lc", weight=1.0, slo=50.0, affinity="big"),
+        ClientClass("be", weight=1.0, slo=500.0, affinity="little",
+                    service=ServiceSpec("bimodal", mix=0.3)),
+    ))
+    cfg, assign = amp_config(
+        sl.SimConfig(policy="libasl", wl=True, sim_time_us=2_000.0),
+        mix, base_slo=50.0)
+    assert cfg.wl_service_per_core == (None,) * 4 + ("bimodal",) * 4
+    tb = sl.build_tables(cfg)
+    np.testing.assert_array_equal(
+        np.asarray(tb.wl_service),
+        [-1] * 4 + [wlg.SERVICES["bimodal"]] * 4)
