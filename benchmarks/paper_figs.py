@@ -68,7 +68,7 @@ def _sweep_rows(cfg, axes, namer, *, slo_us=1e9, product=True, extra=None):
     st, grid = sl.sweep(cfg, axes, slo_us=slo_us, product=product,
                         mesh=MESH, data_axis=DATA_AXIS)
     rows = []
-    for s in sl.sweep_summaries(cfg, st, grid):
+    for s in sl.sweep_summaries(cfg, st, grid, slo_us=slo_us):
         cell = {k: s[k] for k in grid}
         r = _rowdict(namer(cell), cfg, s)
         r.update({k: v for k, v in cell.items()
@@ -434,6 +434,41 @@ def openloop_loadlat(slo=300.0):
 
 
 # ---------------------------------------------------------------------------
+# Chaos collapse: throughput / P99 / goodput vs lock-holder preemption
+# rate, one curve per registered policy (docs/faults.md).  Preemption is
+# asymmetric — ``fault_mask`` makes only the little cores preemptible
+# (scheduler pressure lands on the efficiency cores) — so FIFO craters
+# (its round-robin handoff parks the lock on a preemptible core 1/2 the
+# time and the whole convoy eats each stall) while policies that keep
+# the lock on big cores inside their SLO slack (LibASL, TAS-big) dodge
+# the stalls and degrade gracefully.  The preemption axis rides traced
+# (sweep() flips the static gate): the whole grid is one executable per
+# policy.
+# ---------------------------------------------------------------------------
+
+CHAOS_RATES = (0.0, 0.02, 0.05, 0.1, 0.2)
+
+
+def chaos_collapse(slo=300.0):
+    from repro.core.policies import REGISTRY
+    rows = []
+    for pol in REGISTRY:
+        base = _cfg(pol, 8)
+        cfg = _cfg(pol, 8, sim_time_us=60_000.0,
+                   preempt_scale_us=50.0,
+                   fault_mask=tuple(0.0 if b else 1.0 for b in base.big),
+                   **FIG1_KW.get(pol, {}))
+        rows += _sweep_rows(
+            cfg, {"preempt_rate": list(CHAOS_RATES)},
+            lambda c, p=pol: f"chaos/{p}/pr{c['preempt_rate']:g}",
+            slo_us=slo,
+            extra=lambda c, s: dict(
+                slo_us=slo, goodput_eps=s["goodput_eps"],
+                slo_good_frac=s["slo_good_frac"]))
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # Bench-6: blocking locks / oversubscription — wakeup latency on the
 # FIFO handoff path; LibASL standbys dodge it (wakeup is a traced axis)
 # ---------------------------------------------------------------------------
@@ -468,4 +503,5 @@ ALL = {
     "bench6_blocking": bench6_blocking,
     "loadlat_sweep": loadlat_sweep,
     "openloop_loadlat": openloop_loadlat,
+    "chaos_collapse": chaos_collapse,
 }

@@ -21,9 +21,15 @@ Sections:
   kernels        — per-kernel interpret-mode check vs jnp reference
   roofline       — reads artifacts/roofline/*.json (produced by
                    ``python -m benchmarks.roofline``; compile-heavy)
+  chaos          — CI gate for the fault-injection layer
+                   (docs/faults.md): every registered policy stays live
+                   under combined faults, zero-rate injection is
+                   bit-identical to fault-free, and LibASL's goodput
+                   under maximum preemption stays >= FIFO's.  Opt-in
+                   (re-runs the chaos_collapse figure)
 
-The smoke gates are ``--section sim --quick`` and
-``--section serving --quick``.
+The smoke gates are ``--section sim --quick``,
+``--section serving --quick`` and ``--section chaos --quick``.
 """
 
 from __future__ import annotations
@@ -153,6 +159,14 @@ def _headline(name, rows) -> str:
                     f"sat:shfl_tput_vs_fifo="
                     f"{h['shfl']['tput'] / h['fifo']['tput']:.2f}x;"
                     f"libasl_little_p99={h['libasl']['ep_p99_little']:.0f}us")
+        if name == "chaos_collapse":
+            mx = max(r["preempt_rate"] for r in rows)
+            h = {r["policy"]: r for r in rows if r["preempt_rate"] == mx}
+            z = {r["policy"]: r for r in rows if r["preempt_rate"] == 0.0}
+            return (f"pr{mx:g}:fifo_drop="
+                    f"{1 - h['fifo']['tput'] / z['fifo']['tput']:.0%};"
+                    f"libasl_goodput_vs_fifo="
+                    f"{h['libasl']['goodput_eps'] / h['fifo']['goodput_eps']:.2f}x")
         if name == "straggler_training":
             by = {r["name"].split("/")[-1]: r for r in rows}
             return (f"asl_vs_sync={by['asl-staleness']['steps_per_s'] / by['sync']['steps_per_s']:.2f}x;"
@@ -315,6 +329,87 @@ def _serving_section(results, quick: bool) -> bool:
 SERVING_P99_FLOOR = 1.5
 
 
+# Combined-fault probe load for --section chaos (docs/faults.md): lock-
+# holder preemption + core churn + straggler spikes, all at once.
+CHAOS_PROBE_KW = dict(preempt_rate=0.1, preempt_scale_us=30.0,
+                      churn_rate=0.2, churn_period_us=200.0,
+                      straggle_rate=0.05, straggle_scale=10.0)
+
+
+def _chaos_section(results, quick: bool) -> bool:
+    """CI gate for the fault-injection layer (docs/faults.md):
+
+    1. liveness — every registered policy survives combined faults
+       (preemption + churn + stragglers): every core keeps completing
+       epochs, the sim reaches its horizon, the event budget holds;
+    2. purity — a zero-rate cell of a gate-on faulted sweep is
+       bit-identical to a plain fault-free run (fault injection off is
+       provably a no-op);
+    3. grace — the chaos_collapse figure's headline claim: LibASL's
+       goodput under maximum preemption stays >= FIFO's.
+    """
+    import jax
+    import numpy as np
+
+    from benchmarks import paper_figs
+    from repro.core import simlock as sl
+    from repro.core.policies import REGISTRY
+
+    horizon = 2_000.0 if quick else 10_000.0
+    probe, live_ok = {}, True
+    for name in sorted(REGISTRY):
+        cfg = sl.SimConfig(policy=name, sim_time_us=horizon,
+                           **CHAOS_PROBE_KW)
+        st, grid = sl.sweep(cfg, {"seed": [0, 1]}, slo_us=60.0)
+        cell_ok = True
+        for s in sl.sweep_summaries(cfg, st, grid):
+            cell_ok = (cell_ok
+                       and min(s["epochs_per_core"]) > 0
+                       and s["sim_time_us"] >= 0.9 * horizon
+                       and s["events"] < cfg.max_events)
+        probe[name] = {"ok": bool(cell_ok),
+                       "summary": s}          # last cell, for the record
+        live_ok = live_ok and cell_ok
+    bad = [n for n, p in probe.items() if not p["ok"]]
+    _emit("chaos/liveness", 0.0,
+          f"policies={len(REGISTRY)};faults=preempt+churn+straggle;"
+          + (f"stuck={','.join(bad)};" if bad else "")
+          + ("PASS" if live_ok else "FAIL"))
+
+    cfg = sl.SimConfig(policy="libasl", sim_time_us=horizon)
+    st_sw, _ = sl.sweep(cfg, {"preempt_rate": [0.0, 0.1],
+                              "churn_rate": [0.0, 0.2],
+                              "straggle_rate": [0.0, 0.05]},
+                        product=False, slo_us=60.0)
+    st_plain = sl.run(cfg, 60.0, 0)
+    zero_cell = jax.tree.map(lambda x: np.asarray(x[0]), st_sw)
+    pure_ok = all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree.leaves(zero_cell),
+                        jax.tree.leaves(st_plain)))
+    _emit("chaos/zero_rate_purity", 0.0,
+          f"bit_identical={pure_ok};{'PASS' if pure_ok else 'FAIL'}")
+
+    rows = paper_figs.chaos_collapse()
+    results["chaos/chaos_collapse"] = rows
+    mx = max(r["preempt_rate"] for r in rows)
+    h = {r["policy"]: r for r in rows if r["preempt_rate"] == mx}
+    grace_ok = h["libasl"]["goodput_eps"] >= h["fifo"]["goodput_eps"]
+    _emit("chaos/goodput_gate", 0.0,
+          f"pr{mx:g}:libasl_goodput={h['libasl']['goodput_eps']:.0f}"
+          f"_vs_fifo={h['fifo']['goodput_eps']:.0f};"
+          f"{'PASS' if grace_ok else 'FAIL'}")
+
+    gate = bool(live_ok and pure_ok and grace_ok)
+    results["chaos/gate"] = {
+        "liveness": probe, "zero_rate_bit_identical": bool(pure_ok),
+        "max_preempt_rate": float(mx),
+        "libasl_goodput_eps": float(h["libasl"]["goodput_eps"]),
+        "fifo_goodput_eps": float(h["fifo"]["goodput_eps"]),
+        "pass": gate}
+    return gate
+
+
 def _roofline_section(results):
     art = Path(__file__).resolve().parents[1] / "artifacts" / "roofline"
     cells = []
@@ -335,10 +430,12 @@ def _roofline_section(results):
     results["roofline/cells"] = cells
 
 
-SECTIONS = ("sim", "paper", "serving", "kernels", "roofline")
-# "sim" is opt-in (--section sim): it mutates the XLA environment
-# (8 virtual devices, pinned intra-op threading), which would silently
-# change the kernel/serving baselines of a default all-sections run.
+SECTIONS = ("sim", "paper", "serving", "kernels", "roofline", "chaos")
+# "sim" and "chaos" are opt-in (--section ...): "sim" mutates the XLA
+# environment (8 virtual devices, pinned intra-op threading), which
+# would silently change the kernel/serving baselines of a default
+# all-sections run; "chaos" re-runs the chaos_collapse figure the paper
+# section already produces.
 DEFAULT_SECTIONS = ("paper", "serving", "kernels", "roofline")
 
 
@@ -373,7 +470,7 @@ def main(argv=None) -> None:
     from benchmarks import paper_figs
     if args.quick:
         paper_figs.SIM_SCALE = 0.1
-    sim_ok = serving_ok = True
+    sim_ok = serving_ok = chaos_ok = True
     if "sim" in sections:
         sim_ok = _sim_section(results, args.quick)
     if "paper" in sections:
@@ -384,10 +481,12 @@ def main(argv=None) -> None:
         _kernel_bench(results)
     if "roofline" in sections:
         _roofline_section(results)
+    if "chaos" in sections:
+        chaos_ok = _chaos_section(results, args.quick)
     (ART / "results.json").write_text(json.dumps(results, indent=1,
                                                  default=str))
     print(f"# wrote {ART / 'results.json'}")
-    if not (sim_ok and serving_ok):
+    if not (sim_ok and serving_ok and chaos_ok):
         raise SystemExit(1)
 
 

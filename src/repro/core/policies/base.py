@@ -44,6 +44,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.faults import model as flt
+
 # Phases == event types (one pending event per core; the phase of the
 # core at the head of the event clock selects the handler).
 NONCRIT, STANDBY, QUEUED, HOLDER, SPIN, ARRIVAL = 0, 1, 2, 3, 4, 5
@@ -117,6 +119,27 @@ def grant(st, cfg, tb, pm, cond, c, t, wakeup=False):
         # critical section.
         dur = jnp.maximum((dur.astype(jnp.float32)
                            * st.svc_scale[c_safe]).astype(jnp.int32), 1)
+    if cfg.straggle_rate > 0.0 or cfg.preempt_rate > 0.0:
+        # Fault injection (repro.faults): the draw index is the core's
+        # CS counter (counter-pure — batching/chunking/sharding cannot
+        # perturb it), the rate is multiplied by the per-core
+        # eligibility mask, and both terms are additive wheres, so a
+        # zero rate is bit-identical to a fault-free run.
+        gix = st.cs_cnt[c_safe]
+        eligible = tb.ft_mask[c_safe]
+    if cfg.straggle_rate > 0.0:
+        # Straggler spike: this CS runs straggle_scale x long (DVFS /
+        # migration made the core slow) — applied before preemption so
+        # the stall is independent of the spiked duration.
+        dur = dur + flt.straggle_extra(pm.seed, c_safe, gix, dur,
+                                       pm.straggle_rate * eligible,
+                                       pm.straggle_scale)
+    if cfg.preempt_rate > 0.0:
+        # Lock-holder preemption: the holder is descheduled mid-CS for
+        # an Exp(preempt_scale) stall; every waiter eats it.
+        dur = dur + flt.preempt_extra(pm.seed, c_safe, gix,
+                                      pm.preempt_rate * eligible,
+                                      pm.preempt_scale)
     if wakeup and cfg.wakeup_us > 0.0:
         dur = dur + pm.wakeup
     holder = st.holder.at[l].set(jnp.where(cond, c_safe, st.holder[l]))

@@ -74,11 +74,74 @@ from repro.core.policies.base import qlen as _qlen
 from repro.core.policies.base import ticks as _ticks
 from repro.core.policies.base import weighted_pick as _weighted_pick
 from repro.dist.hlo_analysis import executable_stats
+from repro.faults import model as flt
 from repro.workloads import generators as wlg
 
 # name -> stable integer id, derived from the policy registry
 # (registration order; the first four match the pre-registry constants).
 POLICIES = policies.policy_ids()
+
+
+def _validate_config(cfg) -> None:
+    """Reject NaN / negative / out-of-range fields and unknown policy
+    names at construction (``SimConfig.__post_init__``) — a bad knob
+    must raise here, not produce a silent garbage sweep.  Every bound
+    admits the `_canon` replacement values (canonicalized configs pass
+    through this too)."""
+    if cfg.policy not in POLICIES:
+        import difflib
+        hint = difflib.get_close_matches(cfg.policy, POLICIES, n=1)
+        raise ValueError(
+            f"unknown lock policy {cfg.policy!r}; registered: "
+            f"{sorted(POLICIES)}"
+            + (f" -- did you mean {hint[0]!r}?" if hint else ""))
+
+    def chk(name, lo=None, hi=None, lo_open=False):
+        v = getattr(cfg, name)
+        if v != v:  # NaN (ints compare equal to themselves)
+            raise ValueError(f"SimConfig.{name} is NaN")
+        if lo is not None and (v < lo or (lo_open and v == lo)):
+            raise ValueError(f"SimConfig.{name} must be "
+                             f"{'>' if lo_open else '>='} {lo}, got {v!r}")
+        if hi is not None and v > hi:
+            raise ValueError(f"SimConfig.{name} must be <= {hi}, got {v!r}")
+
+    for name in ("long_epoch_prob", "wl_mix", "wl_amp",
+                 "preempt_rate", "churn_rate", "straggle_rate"):
+        chk(name, 0.0, 1.0)
+    for name in ("inter_epoch_us", "wakeup_us", "default_window_us",
+                 "max_window_us", "w_big", "wl_cv", "wl_period_us",
+                 "preempt_scale_us", "long_epoch_scale"):
+        chk(name, 0.0)
+    for name in ("sim_time_us", "wl_rate", "wl_burst", "wl_mix_scale",
+                 "churn_period_us"):
+        chk(name, 0.0, lo_open=True)
+    chk("wl_burst_len", 0.0)
+    chk("straggle_scale", 1.0)
+    chk("pct", 0.0, 100.0, lo_open=True)
+    for name in ("n_cores", "n_locks", "epcap", "max_events", "chunk",
+                 "prop_n"):
+        chk(name, 1)
+    if len(cfg.seg_cs_us) != len(cfg.seg_noncrit_us) or \
+            len(cfg.seg_cs_us) != len(cfg.seg_lock):
+        raise ValueError("seg_noncrit_us / seg_cs_us / seg_lock must have "
+                         "equal lengths")
+    if not cfg.seg_cs_us:
+        raise ValueError("epoch program needs at least one segment")
+    for name in ("seg_noncrit_us", "seg_cs_us", "big", "speed_cs",
+                 "speed_nc", "slo_scale", "fault_mask"):
+        vals = getattr(cfg, name)
+        if any(v != v or v < 0 for v in vals):
+            raise ValueError(f"SimConfig.{name} has a NaN/negative entry: "
+                             f"{vals!r}")
+    for name in ("big", "speed_cs", "speed_nc"):
+        if len(getattr(cfg, name)) < cfg.n_cores:
+            raise ValueError(f"SimConfig.{name} has "
+                             f"{len(getattr(cfg, name))} entries for "
+                             f"{cfg.n_cores} cores")
+    if any(not 0 <= l < cfg.n_locks for l in cfg.seg_lock):
+        raise ValueError(f"seg_lock ids must be in [0, {cfg.n_locks}), "
+                         f"got {cfg.seg_lock!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -119,6 +182,25 @@ class SimConfig:
     # Bench-6: blocking locks — FIFO handoff to a parked waiter pays a
     # wakeup latency; a standby grabbing a free lock (spinning) does not.
     wakeup_us: float = 0.0
+    # Fault injection (repro.faults, docs/faults.md): lock-holder
+    # preemption (the holder is descheduled mid-CS for an Exp(scale)
+    # stall), core churn (during an "off" slot a core's acquire attempts
+    # bounce to the next slot boundary — leave/rejoin on a schedule) and
+    # straggler CS spikes (a critical section runs scale x long).  Only
+    # the on/off bit of each rate is jit-static; the values ride traced
+    # in SimParams, so preempt_rate / preempt_scale / churn_rate /
+    # straggle_rate / straggle_scale sweep as batch axes.
+    preempt_rate: float = 0.0
+    preempt_scale_us: float = 50.0
+    churn_rate: float = 0.0
+    churn_period_us: float = 500.0
+    straggle_rate: float = 0.0
+    straggle_scale: float = 10.0
+    # Per-core fault eligibility (1 = faults may hit this core; () ->
+    # all eligible).  Rides traced in SimTables as a multiplier on the
+    # fault rates, so it is a sweepable table axis and an all-zero mask
+    # is bit-identical to a fault-free run.
+    fault_mask: tuple = ()
     # Stochastic workload model (repro.workloads.generators): per-epoch
     # think (arrival) and service-time scaling.  ``wl`` is the single
     # on/off jit-static bit (it gates whether the draws exist in the HLO
@@ -162,6 +244,9 @@ class SimConfig:
     # measured best on CPU for both the single and the batched path.
     chunk: int = 128
 
+    def __post_init__(self):
+        _validate_config(self)
+
     @property
     def policy_id(self) -> int:
         return POLICIES[self.policy]
@@ -178,6 +263,7 @@ class SimTables(NamedTuple):
     seg_lock: jnp.ndarray  # i32[S] lock id per segment
     slo_scale: jnp.ndarray  # f32[N] per-core SLO multiplier (multi-class)
     wl_service: jnp.ndarray  # i32[N] per-core SERVICES id (-1 = inherit)
+    ft_mask: jnp.ndarray   # f32[N] per-core fault eligibility (0/1)
 
 
 class SimParams(NamedTuple):
@@ -207,6 +293,14 @@ class SimParams(NamedTuple):
     wl_burst_len: jnp.ndarray  # f32 mean epochs per MMPP phase
     wl_amp: jnp.ndarray       # f32 diurnal amplitude
     wl_period: jnp.ndarray    # f32 diurnal period (ticks)
+    # Fault-injection knobs (repro.faults; live ops only when the
+    # matching cfg rate's static on/off bit is set)
+    preempt_rate: jnp.ndarray    # f32 P(holder preempted) per CS
+    preempt_scale: jnp.ndarray   # f32 mean stall (ticks)
+    churn_rate: jnp.ndarray      # f32 P(core off) per churn slot
+    churn_period: jnp.ndarray    # i32 churn slot length (ticks, >= 1)
+    straggle_rate: jnp.ndarray   # f32 P(CS spike)
+    straggle_scale: jnp.ndarray  # f32 CS spike multiplier
     # Policy-owned traced knobs (LockPolicy.init_params; {} for the
     # built-in four) — swept via the policy's declared sweep_axes.
     pol: dict
@@ -262,7 +356,14 @@ def _canon(cfg: SimConfig) -> SimConfig:
         wl_process="poisson", wl_service="det",
         wl_rate=1.0, wl_cv=1.0, wl_mix=0.0, wl_mix_scale=1.0,
         wl_burst=1.0, wl_burst_len=1.0, wl_amp=0.0, wl_period_us=0.0,
-        slo_scale=(), wl_service_per_core=(), policy_kw=())
+        preempt_rate=1.0 if cfg.preempt_rate > 0.0 else 0.0,
+        preempt_scale_us=1.0,
+        churn_rate=1.0 if cfg.churn_rate > 0.0 else 0.0,
+        churn_period_us=1.0,
+        straggle_rate=1.0 if cfg.straggle_rate > 0.0 else 0.0,
+        straggle_scale=1.0,
+        slo_scale=(), wl_service_per_core=(), fault_mask=(),
+        policy_kw=())
 
 
 def build_tables(cfg: SimConfig) -> SimTables:
@@ -291,7 +392,10 @@ def build_tables(cfg: SimConfig) -> SimTables:
         wl_service=jnp.asarray(
             ([-1 if not d else wlg.SERVICES[d]
               for d in cfg.wl_service_per_core] + [-1] * n)[:n],
-            jnp.int32))
+            jnp.int32),
+        # Pad with 1.0 (eligible): faults default to hitting every core.
+        ft_mask=jnp.asarray(
+            (tuple(cfg.fault_mask) + (1.0,) * n)[:n], jnp.float32))
 
 
 def build_params(cfg: SimConfig, slo_us, seed=0, n_active=None) -> SimParams:
@@ -331,6 +435,12 @@ def build_params(cfg: SimConfig, slo_us, seed=0, n_active=None) -> SimParams:
         wl_period=jnp.float32(_ticks(
             cfg.wl_period_us if cfg.wl_period_us > 0.0
             else cfg.sim_time_us)),
+        preempt_rate=jnp.float32(cfg.preempt_rate),
+        preempt_scale=jnp.float32(_ticks(cfg.preempt_scale_us)),
+        churn_rate=jnp.float32(cfg.churn_rate),
+        churn_period=jnp.int32(max(_ticks(cfg.churn_period_us), 1)),
+        straggle_rate=jnp.float32(cfg.straggle_rate),
+        straggle_scale=jnp.float32(cfg.straggle_scale),
         pol=pol_params)
 
 
@@ -445,6 +555,21 @@ def _handle_acquire(st: SimState, cfg: SimConfig, tb: SimTables,
                     pm: SimParams, c, t, cond) -> SimState:
     """A core's non-critical section ended: record the attempt time and
     let the policy decide grab / queue / standby / spin."""
+    if cfg.churn_rate > 0.0:
+        # Core churn: during an "off" slot the core is descheduled — the
+        # acquire attempt bounces to the next slot boundary (strictly
+        # future, so churn can never deadlock) and the policy never sees
+        # it.  One counter-pure decision per (core, slot); the rate is
+        # multiplied by the per-core eligibility mask so an ineligible
+        # core (or rate 0) is bit-identical to fault-free.
+        off = flt.churn_off(pm.seed, c, t,
+                            pm.churn_rate * tb.ft_mask[c],
+                            pm.churn_period)
+        bounce = jnp.logical_and(cond, off)
+        st = st._replace(t_ready=st.t_ready.at[c].set(
+            jnp.where(bounce, flt.churn_rejoin(t, pm.churn_period),
+                      st.t_ready[c])))
+        cond = jnp.logical_and(cond, jnp.logical_not(off))
     st = st._replace(attempt_t=st.attempt_t.at[c].set(
         jnp.where(cond, t, st.attempt_t[c])))
     return policies.get(cfg.policy).on_acquire(st, cfg, tb, pm, c, t, cond)
@@ -793,13 +918,24 @@ _PARAM_AXES = {
     "mix_scale": "wl_mix_scale",
     "burstiness": "wl_burst",
     "burst_len": "wl_burst_len",
+    # Fault-injection axes (repro.faults; sweep() flips the matching
+    # static rate gate on when the axis has a nonzero value)
+    "preempt_rate": "preempt_rate",
+    "preempt_scale": "preempt_scale",
+    "churn_rate": "churn_rate",
+    "straggle_rate": "straggle_rate",
+    "straggle_scale": "straggle_scale",
 }
 _WL_AXES = ("arrival_rate", "cv", "mix", "mix_scale", "burstiness",
             "burst_len")
+# Statically-gated features: sweeping the axis must flip the gate field
+# on in the template config (the on/off bit is part of the jit key).
+_GATE_AXES = ("long_epoch_prob", "wakeup_us", "preempt_rate",
+              "churn_rate", "straggle_rate")
 # axis name -> SimConfig field rebuilt through build_tables per cell
 _TABLE_AXES = ("seg_noncrit_us", "seg_cs_us", "seg_lock", "inter_epoch_us",
                "big", "speed_cs", "speed_nc", "slo_scale",
-               "wl_service_per_core")
+               "wl_service_per_core", "fault_mask")
 SWEEPABLE = tuple(_PARAM_AXES) + _TABLE_AXES + ("window0_us",)
 
 
@@ -828,6 +964,13 @@ def _cell_params(cfg: SimConfig, cell: dict, slo_us, seed) -> SimParams:
         if axis in cell:
             pm = pm._replace(
                 **{_PARAM_AXES[axis]: jnp.float32(cell[axis])})
+    for axis in ("preempt_rate", "churn_rate", "straggle_rate",
+                 "straggle_scale"):
+        if axis in cell:
+            pm = pm._replace(**{axis: jnp.float32(cell[axis])})
+    if "preempt_scale" in cell:
+        pm = pm._replace(preempt_scale=jnp.float32(
+            _ticks(cell["preempt_scale"])))
     if "window0_us" in cell:
         # A swept initial window plays the role of default_window_us (the
         # seed's LibASL-MAX cells set both), so the unit floor follows it.
@@ -842,9 +985,71 @@ def _cell_params(cfg: SimConfig, cell: dict, slo_us, seed) -> SimParams:
     return pm
 
 
+def _sweep_resumable(ccfg: SimConfig, tb: SimTables, pm: SimParams, w0,
+                     resume_dir, chunk: int) -> SimState:
+    """Run the batched sweep in ``chunk``-cell slices, checkpointing
+    each completed slice atomically (repro.ckpt.checkpointer) so an
+    interrupted long sweep resumes from the last completed chunk
+    instead of recomputing from cell 0.  Per-cell results are
+    bit-identical to the one-shot path: vmap lanes are independent (the
+    live-guard no-ops finished lanes), so slicing the cell axis cannot
+    perturb any cell's trajectory."""
+    import json
+    from pathlib import Path
+
+    from repro.ckpt import checkpointer as ckpt
+
+    n_cells = int(np.shape(pm.slo)[0])
+    chunk = max(int(chunk), 1)
+    bounds = [(lo, min(lo + chunk, n_cells))
+              for lo in range(0, n_cells, chunk)]
+    # Fingerprint the sweep: resuming into a directory holding a
+    # different config/grid would silently splice unrelated results.
+    # The digest covers the actual traced values (two grids with equal
+    # shapes but different cells must not match).
+    import hashlib
+    h = hashlib.sha256()
+    for x in jax.tree.leaves((tb, pm, w0)):
+        h.update(np.ascontiguousarray(np.asarray(x)).tobytes())
+    fp = {"canon": repr(ccfg), "n_cells": n_cells, "chunk": chunk,
+          "digest": h.hexdigest(),
+          "leaves": [[list(np.shape(x)), jnp.dtype(x.dtype).name]
+                     for x in jax.tree.leaves((tb, pm))]}
+    d = Path(resume_dir)
+    d.mkdir(parents=True, exist_ok=True)
+    fp_path = d / "sweep.json"
+    if fp_path.exists():
+        if json.loads(fp_path.read_text()) != fp:
+            raise ValueError(
+                f"resume_dir {str(resume_dir)!r} holds a different sweep "
+                f"(config or grid changed); use a fresh directory")
+    else:
+        fp_path.write_text(json.dumps(fp))
+    done = ckpt.latest_step(d)          # chunks 0..done are on disk
+    parts = []
+    for k, (lo, hi) in enumerate(bounds):
+        tb_k = jax.tree.map(lambda x: x[lo:hi], tb)
+        pm_k = jax.tree.map(lambda x: x[lo:hi], pm)
+        w_k = w0[lo:hi]
+        if done is not None and k <= done:
+            target = jax.eval_shape(
+                lambda a, b, c: jax.vmap(
+                    lambda x, y, z: _simulate(ccfg, x, y, z, masked=True)
+                )(a, b, c), tb_k, pm_k, w_k)
+            parts.append(ckpt.restore(d, k, target))
+            continue
+        compiled, rec = _batch_executable(ccfg, tb_k, pm_k, w_k)
+        _log_sweep(rec)
+        st_k = compiled(tb_k, pm_k, w_k)
+        ckpt.save(d, k, st_k)
+        parts.append(st_k)
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *parts)
+
+
 def sweep(cfg: SimConfig, axes: dict, *, slo_us=1e9, seed=0,
           windows0=None, product: bool = True,
-          mesh=None, data_axis="data"):
+          mesh=None, data_axis="data",
+          resume_dir=None, resume_chunk: int = 8):
     """Run a whole parameter sweep as ONE vmapped, compiled call.
 
     ``axes`` maps axis names (see ``SWEEPABLE``) to value lists.  With
@@ -862,12 +1067,22 @@ def sweep(cfg: SimConfig, axes: dict, *, slo_us=1e9, seed=0,
     contiguous row split and results stay bit-identical to the unsharded
     run (docs/simulator.md §Sharded sweeps).
 
+    ``resume_dir`` makes a long sweep resumable: cells run in
+    ``resume_chunk``-sized slices, each checkpointed atomically on
+    completion (``repro.ckpt.checkpointer``); re-running the same sweep
+    with the same directory restores completed chunks and continues,
+    bit-identical to an uninterrupted run.  Not composable with
+    ``mesh``.
+
     Returns ``(state, grid)``: ``state`` leaves have a leading cell axis;
     ``grid`` maps axis name -> np.ndarray of per-cell values.  Non-swept
     values come from ``cfg`` / ``slo_us`` / ``seed`` / ``windows0``.
     """
     if not axes:
         raise ValueError("empty sweep: pass at least one axis")
+    if resume_dir is not None and mesh is not None:
+        raise ValueError("resume_dir does not compose with mesh-sharded "
+                         "sweeps; run chunked-resumable sweeps unsharded")
     allowed = sweepable_axes(cfg)
     for name in axes:
         if name not in allowed:
@@ -875,7 +1090,7 @@ def sweep(cfg: SimConfig, axes: dict, *, slo_us=1e9, seed=0,
                              f"sweepable: {allowed}")
     # Sweeping a statically-gated feature must switch its gate on in the
     # template config (the gate is part of the canonical jit key).
-    for gate in ("long_epoch_prob", "wakeup_us"):
+    for gate in _GATE_AXES:
         if gate in axes and max(axes[gate]) > 0.0:
             cfg = dataclasses.replace(cfg, **{gate: max(axes[gate])})
     if not cfg.wl and any(a in axes for a in _WL_AXES):
@@ -933,9 +1148,13 @@ def sweep(cfg: SimConfig, axes: dict, *, slo_us=1e9, seed=0,
         tb, pm = jax.device_put((tb, pm), ns)
         w0 = jax.device_put(w0, ns)
 
-    compiled, rec = _batch_executable(_canon(cfg), tb, pm, w0)
-    _log_sweep(rec)
-    st = compiled(tb, pm, w0)
+    if resume_dir is not None:
+        st = _sweep_resumable(_canon(cfg), tb, pm, w0, resume_dir,
+                              resume_chunk)
+    else:
+        compiled, rec = _batch_executable(_canon(cfg), tb, pm, w0)
+        _log_sweep(rec)
+        st = compiled(tb, pm, w0)
     if pad:
         st = jax.tree.map(lambda x: x[:n_cells], st)
     grid = {k: np.asarray([cell[k] for cell in cells], dtype=object)
@@ -952,8 +1171,10 @@ def sweep_slo(cfg: SimConfig, slo_us_values, seed=0) -> SimState:
 
 
 def sweep_summaries(cfg: SimConfig, st: SimState, grid: dict,
-                    warmup: int = 32) -> list:
-    """Host-side per-cell summaries of a sweep result (one np transfer)."""
+                    warmup: int = 32, slo_us=None) -> list:
+    """Host-side per-cell summaries of a sweep result (one np transfer).
+    ``slo_us`` (or a swept ``slo_us`` axis) adds the goodput metrics —
+    see :func:`summarize`."""
     st_np = jax.tree.map(np.asarray, st)
     n_cells = len(next(iter(grid.values()))) if grid else \
         st_np.events.shape[0]
@@ -961,7 +1182,9 @@ def sweep_summaries(cfg: SimConfig, st: SimState, grid: dict,
     for i in range(n_cells):
         cell_st = jax.tree.map(lambda x: x[i], st_np)
         n_act = int(grid["n_cores"][i]) if "n_cores" in grid else None
-        s = summarize(cfg, cell_st, warmup, n_active=n_act)
+        cell_slo = float(grid["slo_us"][i]) if "slo_us" in grid else slo_us
+        s = summarize(cfg, cell_st, warmup, n_active=n_act,
+                      slo_us=cell_slo)
         s.update({k: grid[k][i] for k in grid})
         out.append(s)
     return out
@@ -979,9 +1202,12 @@ def _ring_values(buf: np.ndarray, cnt: int, warmup: int = 32) -> np.ndarray:
     return buf  # ring wrapped: holds the most recent `cap` samples
 
 def summarize(cfg: SimConfig, st: SimState, warmup: int = 32,
-              n_active: int = None) -> dict:
+              n_active: int = None, slo_us: float = None) -> dict:
     """Throughput + tail latency per core class (all values in us).
-    ``n_active`` slices per-core outputs for padded sweep cells."""
+    ``n_active`` slices per-core outputs for padded sweep cells.
+    ``slo_us`` adds goodput: the fraction of sampled epochs within the
+    per-core SLO (``slo_us * slo_scale[c]``) and the epochs/s that
+    fraction represents — the chaos figures' useful-work metric."""
     n = cfg.n_cores if n_active is None else int(n_active)
     big = np.asarray(cfg.big[:n], bool)
     ep_lat = np.asarray(st.ep_lat)[:n]
@@ -1015,4 +1241,14 @@ def summarize(cfg: SimConfig, st: SimState, warmup: int = 32,
         out[f"ep_p50_{name}_us"] = float(np.percentile(ep, 50)) if ep.size else float("nan")
         out[f"cs_p99_{name}_us"] = float(np.percentile(cs, 99)) if cs.size else float("nan")
     out["final_window_us"] = (np.asarray(st.window)[:n] / US).tolist()
+    if slo_us is not None:
+        scl = np.asarray((tuple(cfg.slo_scale) + (1.0,) * n)[:n], float)
+        good = tot = 0
+        for c in range(n):
+            v = _ring_values(ep_lat[c], int(ep_cnt[c]), warmup)
+            good += int(np.sum(v / US <= slo_us * scl[c]))
+            tot += v.size
+        frac = good / tot if tot else 0.0
+        out["slo_good_frac"] = frac
+        out["goodput_eps"] = out["throughput_epochs_per_s"] * frac
     return out

@@ -1,0 +1,23 @@
+"""Fault injection for the lock + serving simulators (docs/faults.md).
+
+Device side: :func:`preempt_extra` / :func:`straggle_extra` /
+:func:`churn_off` ride inside simlock's traced event handlers (the
+fault knobs are ``SimConfig`` fields, swept as batch axes).  Host side:
+:class:`FaultSpec` plus the precomputed schedules in
+:mod:`repro.faults.host` drive the serving/dispatch sims.
+"""
+
+from repro.faults.host import outage_mask, preempt_stalls, spike_hits
+from repro.faults.model import (FaultSpec, churn_off, churn_rejoin,
+                                preempt_extra, straggle_extra)
+
+__all__ = [
+    "FaultSpec",
+    "churn_off",
+    "churn_rejoin",
+    "outage_mask",
+    "preempt_extra",
+    "preempt_stalls",
+    "spike_hits",
+    "straggle_extra",
+]

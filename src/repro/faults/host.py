@@ -1,0 +1,50 @@
+"""Host-side fault schedules for the serving sims (dispatch / engine).
+
+Everything is precomputed into numpy arrays from the same counter-pure
+streams the device simulator draws from — a per-event jnp dispatch in
+the dispatch sim's Python event loop would be ~orders slower, and the
+precomputed schedule is exactly reconstructible (same (seed, entity,
+index) counters) regardless of horizon or interleaving.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.faults.model import FaultSpec
+from repro.workloads import generators as wlg
+
+
+def outage_mask(spec: FaultSpec, n_replicas: int, duration: float,
+                seed: int) -> np.ndarray:
+    """bool[n_replicas, n_slots]: replica r is out during slot k.
+    Slot k covers [k*churn_period, (k+1)*churn_period)."""
+    n_slots = int(np.ceil(max(duration, 0.0) / spec.churn_period)) + 2
+    if spec.churn_rate <= 0.0:
+        return np.zeros((n_replicas, n_slots), bool)
+    return np.stack([
+        wlg.straggle_uniforms(seed, r, n_slots, stream=wlg.STREAM_CHURN)
+        < spec.churn_rate for r in range(n_replicas)])
+
+
+def spike_hits(spec: FaultSpec, replica: int, n: int,
+               seed: int) -> np.ndarray:
+    """bool[n]: dispatch i on ``replica`` is a straggler spike."""
+    if spec.straggle_rate <= 0.0:
+        return np.zeros(n, bool)
+    u = wlg.straggle_uniforms(seed, replica, n, stream=wlg.STREAM_SPIKE)
+    return u < spec.straggle_rate
+
+
+def preempt_stalls(spec: FaultSpec, replica: int, n: int,
+                   seed: int) -> np.ndarray:
+    """f64[n]: preemption stall (seconds) paid by dispatch i on
+    ``replica`` — Exp(mean preempt_scale) with prob preempt_rate."""
+    if spec.preempt_rate <= 0.0:
+        return np.zeros(n)
+    u = wlg.straggle_uniforms(seed, replica, n,
+                              stream=wlg.STREAM_PREEMPT)
+    uz = wlg.straggle_uniforms(seed, replica, n,
+                               stream=wlg.STREAM_PREEMPT ^ 0x40000)
+    stall = spec.preempt_scale * -np.log1p(-uz)
+    return np.where(u < spec.preempt_rate, stall, 0.0)

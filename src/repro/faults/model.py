@@ -1,0 +1,112 @@
+"""The fault model: counter-pure draws shared by the device-side lock
+simulator and the host-side serving sims.
+
+Three fault classes, each the paper's symmetry assumption broken a
+different way (docs/faults.md):
+
+* **Lock-holder preemption** — the holder is descheduled mid-critical-
+  section for an Exp-distributed stall; every waiter eats it (the
+  classic preemption pathology scalable queue locks are famous for).
+* **Core churn** — cores leave and rejoin on a slotted schedule: during
+  an "off" slot a core's acquire attempts bounce to the next slot
+  boundary (the ROADMAP's cores-joining/leaving-mid-run scenario).
+* **Straggler spikes** — a critical section occasionally runs ``scale``x
+  long (DVFS throttling / migration turning a big core slow mid-run).
+
+RNG discipline is the same load-bearing invariant as the workload
+generators: every draw is pure in ``(seed, stream, *indices)`` —
+preemption/straggle index by the core's critical-section counter, churn
+by the time slot — so batched, sharded, chunked and single runs see
+identical faults, and a zero rate is *bit-identical* to fault-free (the
+draw compares ``u < 0`` and every fault term is an additive ``where``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+
+from repro.workloads import generators as wlg
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Host-level fault knobs (seconds) for the serving sims — the
+    analogue of the ``SimConfig`` fault fields (microseconds).
+
+    ``preempt`` hits a request's *service* (a stall added on the
+    replica, mean ``preempt_scale`` seconds), ``churn`` takes whole
+    replicas out for ``churn_period``-second slots, ``straggle``
+    multiplies a service time by ``straggle_scale``.
+    """
+
+    preempt_rate: float = 0.0     # P(stall) per dispatch
+    preempt_scale: float = 0.0    # mean stall (seconds)
+    churn_rate: float = 0.0       # P(replica out) per period slot
+    churn_period: float = 1.0     # outage slot length (seconds)
+    straggle_rate: float = 0.0    # P(service spike) per dispatch
+    straggle_scale: float = 1.0   # spike multiplier (>= 1)
+
+    def __post_init__(self):
+        for f in ("preempt_rate", "churn_rate", "straggle_rate"):
+            v = getattr(self, f)
+            if not 0.0 <= v <= 1.0 or math.isnan(v):
+                raise ValueError(f"{f} must be a probability, got {v!r}")
+        if self.preempt_scale < 0.0 or math.isnan(self.preempt_scale):
+            raise ValueError(f"preempt_scale must be >= 0, "
+                             f"got {self.preempt_scale!r}")
+        if self.churn_period <= 0.0 or math.isnan(self.churn_period):
+            raise ValueError(f"churn_period must be > 0, "
+                             f"got {self.churn_period!r}")
+        if self.straggle_scale < 1.0 or math.isnan(self.straggle_scale):
+            raise ValueError(f"straggle_scale must be >= 1, "
+                             f"got {self.straggle_scale!r}")
+
+    @property
+    def active(self) -> bool:
+        return (self.preempt_rate > 0.0 or self.churn_rate > 0.0
+                or self.straggle_rate > 0.0)
+
+
+# --------------------------------------------------------------------------
+# Device-side draws (traced; called from simlock's event handlers)
+# --------------------------------------------------------------------------
+
+def preempt_extra(seed, core, cs_ix, rate, scale_ticks):
+    """Holder-preemption stall (ticks, i32) for core ``core``'s
+    ``cs_ix``-th critical section: Exp(mean ``scale_ticks``) with
+    probability ``rate``, else 0.  Pure in (seed, core, cs_ix)."""
+    u = wlg.counter_uniform(wlg.stream_key(seed, wlg.STREAM_PREEMPT),
+                            core, cs_ix)
+    uz = wlg.counter_uniform(
+        wlg.stream_key(seed, wlg.STREAM_PREEMPT ^ 0x40000), core, cs_ix)
+    stall = (scale_ticks * wlg.exp_unit(uz)).astype(jnp.int32)
+    return jnp.where(u < rate, stall, 0)
+
+
+def straggle_extra(seed, core, cs_ix, dur, rate, scale):
+    """Straggler service spike: extra ticks that stretch this critical
+    section to ``scale`` x its drawn duration, with probability
+    ``rate``.  Additive (``dur + extra``) so a zero rate is bit-exact."""
+    u = wlg.counter_uniform(wlg.stream_key(seed, wlg.STREAM_SPIKE),
+                            core, cs_ix)
+    extra = (dur.astype(jnp.float32) * (scale - 1.0)).astype(jnp.int32)
+    return jnp.where(u < rate, extra, 0)
+
+
+def churn_off(seed, core, t, rate, period_ticks):
+    """Is ``core`` churned out during the slot containing tick ``t``?
+    One decision per (core, slot) — pure, so re-attempts within a slot
+    agree and the host can reconstruct the schedule."""
+    slot = t // period_ticks
+    u = wlg.counter_uniform(wlg.stream_key(seed, wlg.STREAM_CHURN),
+                            core, slot)
+    return u < rate
+
+
+def churn_rejoin(t, period_ticks):
+    """First tick of the next churn slot (strictly > t, so a bounced
+    core always re-fires — churn can never deadlock the sim)."""
+    return (t // period_ticks + 1) * period_ticks

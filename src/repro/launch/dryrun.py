@@ -127,7 +127,7 @@ def _tiny_shape(shape, mesh):
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
              force: bool = False, save_hlo: bool = False,
-             mesh=None, tiny: bool = False) -> dict:
+             mesh=None, tiny: bool = False, strict: bool = False) -> dict:
     """Lower + compile one (arch, shape, mesh) cell and record its
     accounting.  Default mesh is the production 16x16 / 2x16x16
     construction; ``mesh=`` substitutes any other ``launch.mesh`` mesh
@@ -206,6 +206,11 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
     except Exception as e:  # record the failure; dry-run failures are bugs
         rec.update(ok=False, error=f"{type(e).__name__}: {e}",
                    traceback=traceback.format_exc()[-2000:])
+        if strict:
+            # Persist the record first so the artifact survives, then
+            # surface the original exception to the caller/CI.
+            out_path.write_text(json.dumps(rec, indent=1))
+            raise
     out_path.write_text(json.dumps(rec, indent=1))
     return rec
 
@@ -227,6 +232,10 @@ def main():
                          "mesh so sub-production cells run end-to-end")
     ap.add_argument("--tiny", action="store_true",
                     help="reduced per-arch CPU config + shrunken shape")
+    ap.add_argument("--strict", action="store_true",
+                    help="re-raise the first cell failure (after writing "
+                         "its artifact) instead of recording and "
+                         "continuing — fail-fast mode for CI")
     args = ap.parse_args()
 
     mesh = None
@@ -246,7 +255,7 @@ def main():
                 t0 = time.time()
                 rec = run_cell(arch, shape, mp, force=args.force,
                                save_hlo=args.save_hlo, mesh=mesh,
-                               tiny=args.tiny)
+                               tiny=args.tiny, strict=args.strict)
                 status = "SKIP" if rec.get("skipped") else (
                     "ok" if rec["ok"] else "FAIL")
                 n_fail += 0 if rec["ok"] else 1

@@ -28,6 +28,8 @@ import numpy as np
 
 from repro.core.aimd import AIMDWindow, unit_for
 from repro.core.policies import dispatch_names
+from repro.faults import host as flt_host
+from repro.faults.model import FaultSpec
 from repro.workloads import traces as wl_traces
 from repro.workloads.generators import (LEGACY_LOGNORMAL_CV,
                                         LEGACY_LOGNORMAL_MEAN, ArrivalSpec,
@@ -43,14 +45,19 @@ DISPATCH_POLICIES = dispatch_names()
 class Replica:
     speed: float          # service-time multiplier (1.0 = fast)
     busy_until: float = 0.0
+    idx: int = 0          # fleet-wide index (fault-stream namespace)
+    served: int = 0       # dispatches so far (fault-draw counter)
 
 
 def spill_index(queue, clock):
     """Which queued request an ASL spill hands to a free slow replica:
     the earliest-*deadline* expired standby (paper §3.2 — reorder-window
     expiry order, not FIFO arrival order), or None when no window has
-    expired yet.  ``queue`` holds (arrival_t, service_s, deadline) rows."""
-    expired = [(d, i) for i, (_, _, d) in enumerate(queue) if clock >= d]
+    expired yet.  ``queue`` holds ``(arrival_t, service_s, win_deadline,
+    timeout_deadline, tries)`` rows (the last two are the resilience
+    columns; the window deadline is still ``row[2]``)."""
+    expired = [(row[2], i) for i, row in enumerate(queue)
+               if clock >= row[2]]
     return min(expired)[1] if expired else None
 
 
@@ -59,7 +66,10 @@ def simulate_dispatch(policy: str, *, n_fast=4, n_slow=4, slow_factor=3.0,
                       slo=None, pct=99.0, seed=0,
                       default_window=0.02, max_window=30.0,
                       arrival: ArrivalSpec = None,
-                      service: ServiceSpec = None, trace=None):
+                      service: ServiceSpec = None, trace=None,
+                      timeout_s=None, max_retries=0,
+                      backoff_base=0.05, backoff_cap=2.0,
+                      admit_cap=None, faults: FaultSpec = None):
     """Event-driven M/G/k with heterogeneous servers; returns metrics.
 
     ASL: a queued request may wait (stand by) for a fast replica until its
@@ -70,6 +80,21 @@ def simulate_dispatch(policy: str, *, n_fast=4, n_slow=4, slow_factor=3.0,
     ``trace`` to replay it exactly, or ``arrival``/``service`` specs to
     generate one (default: open-loop Poisson arrivals + the legacy
     lognormal service shape) — deterministic per ``seed``.
+
+    Resilience + chaos (docs/faults.md; all off by default, in which
+    case the run is bit-identical to the pre-chaos sim):
+
+    * ``timeout_s`` — a request still queued ``timeout_s`` after arrival
+      is cancelled; with retries left it re-enqueues after a capped
+      exponential backoff (``backoff_base * 2**tries``, cap
+      ``backoff_cap``), keeping its original arrival time so measured
+      latency includes every backoff.
+    * ``admit_cap`` — admission control: arrivals are shed while the
+      queue holds that many requests.
+    * ``faults`` — a :class:`repro.faults.FaultSpec`: replica outages
+      (churn: a replica accepts no new work during "off" slots),
+      straggler service spikes, and preemption stalls, all counter-pure
+      per (replica, dispatch index) via ``repro.faults.host``.
     """
     if policy not in DISPATCH_POLICIES:
         raise ValueError(f"unknown dispatch policy {policy!r}; "
@@ -81,46 +106,111 @@ def simulate_dispatch(policy: str, *, n_fast=4, n_slow=4, slow_factor=3.0,
                                    mean=service_s * LEGACY_LOGNORMAL_MEAN,
                                    cv=LEGACY_LOGNORMAL_CV),
             duration_s, seed)
-    fast = [Replica(1.0) for _ in range(n_fast)]
-    slow = [Replica(slow_factor) for _ in range(n_slow)]
+    fast = [Replica(1.0, idx=i) for i in range(n_fast)]
+    slow = [Replica(slow_factor, idx=n_fast + i) for i in range(n_slow)]
     win = AIMDWindow(window=default_window,
                      unit=unit_for(default_window, pct), pct=pct,
                      max_window=max_window)
     arrivals = list(zip(trace.arrival_t.tolist(),
                         trace.service_s.tolist()))
 
+    chaos_faults = faults if faults is not None and faults.active else None
+    if chaos_faults is not None:
+        n_rep = n_fast + n_slow
+        # Precomputed counter-pure schedules (repro.faults.host): per-
+        # (replica, slot) outages; per-(replica, dispatch) spike/stall.
+        out_mask = flt_host.outage_mask(chaos_faults, n_rep,
+                                        duration_s * 4 + 60.0, seed)
+        cap_disp = len(arrivals) * (1 + max_retries) + 64
+        spikes = [flt_host.spike_hits(chaos_faults, r, cap_disp, seed)
+                  for r in range(n_rep)]
+        stalls = [flt_host.preempt_stalls(chaos_faults, r, cap_disp, seed)
+                  for r in range(n_rep)]
+
+    def rep_out(r, now):
+        if chaos_faults is None or chaos_faults.churn_rate <= 0.0:
+            return False
+        k = min(int(now / chaos_faults.churn_period),
+                out_mask.shape[1] - 1)
+        return bool(out_mask[r.idx, k])
+
     lat = []
     served_fast = served_slow = 0
-    queue = []          # (arrival_t, svc, deadline_for_fast)
+    timeouts = retried = drops = lost = 0
+    queue = []          # (arrival_t, svc, win_dead, timeout_dead, tries)
     events = []         # completion heap
+    retry_q = []        # (due_t, seq, arrival_t, svc, tries)
+    seq = 0
     clock = 0.0
     ai = 0
+    hard_stop = 10.0 * duration_s + 60.0   # churn_rate=1 can strand work
 
     def free_replica(pool, now):
         for r in pool:
-            if r.busy_until <= now:
+            if r.busy_until <= now and not rep_out(r, now):
                 return r
         return None
 
-    while ai < len(arrivals) or queue or events:
-        # next event time: arrival or completion; an ASL window deadline is
-        # only an event if a slow replica is free to accept the spill.
+    while ai < len(arrivals) or queue or events or retry_q:
+        # next event time: arrival, completion, retry release; an ASL
+        # window deadline is only an event if a slow replica is free to
+        # accept the spill; a queued timeout and (under churn) the next
+        # outage-slot boundary are events too.
         t_arr = arrivals[ai][0] if ai < len(arrivals) else np.inf
         t_done = events[0] if events else np.inf
-        t_next = min(t_arr, t_done)
+        t_retry = retry_q[0][0] if retry_q else np.inf
+        t_next = min(t_arr, t_done, t_retry)
         if policy == "asl" and queue and \
                 free_replica(slow, clock) is not None:
-            t_dead = min(d for _, _, d in queue)
+            t_dead = min(row[2] for row in queue)
             t_next = min(t_next, max(t_dead, clock))
+        if timeout_s is not None and queue:
+            t_to = min(row[3] for row in queue)
+            t_next = min(t_next, max(t_to, clock))
+        if chaos_faults is not None and chaos_faults.churn_rate > 0.0 \
+                and queue:
+            k = int(clock / chaos_faults.churn_period)
+            t_next = min(t_next, (k + 1) * chaos_faults.churn_period)
         if t_next == np.inf:
             break
         clock = max(clock, t_next)
+        if clock > hard_stop:
+            break
         while events and events[0] <= clock:
             heapq.heappop(events)
+        while retry_q and retry_q[0][0] <= clock:
+            _, _, a0, svc, tries = heapq.heappop(retry_q)
+            queue.append((a0, svc, clock + win.window,
+                          clock + timeout_s, tries))
         while ai < len(arrivals) and arrivals[ai][0] <= clock:
             a, svc = arrivals[ai]
             ai += 1
-            queue.append((a, svc, a + win.window))
+            if admit_cap is not None and len(queue) >= admit_cap:
+                drops += 1           # admission control: shed at arrival
+                continue
+            queue.append((a, svc, a + win.window,
+                          (a + timeout_s) if timeout_s is not None
+                          else np.inf, 0))
+        if timeout_s is not None:
+            # Timeout detection: cancel expired queue entries; with
+            # retries left they re-arrive after a capped exp backoff.
+            keep = []
+            for row in queue:
+                if clock >= row[3]:
+                    timeouts += 1
+                    if row[4] < max_retries:
+                        retried += 1
+                        backoff = min(backoff_base * 2 ** row[4],
+                                      backoff_cap)
+                        seq += 1
+                        heapq.heappush(retry_q,
+                                       (clock + backoff, seq, row[0],
+                                        row[1], row[4] + 1))
+                    else:
+                        lost += 1
+                else:
+                    keep.append(row)
+            queue = keep
         # dispatch loop
         progressed = True
         while queue and progressed:
@@ -131,7 +221,8 @@ def simulate_dispatch(policy: str, *, n_fast=4, n_slow=4, slow_factor=3.0,
             pick = 0
             if policy == "fair":
                 # round-robin: earliest-free replica of either kind
-                cands = [r for r in fast + slow if r.busy_until <= clock]
+                cands = [r for r in fast + slow
+                         if r.busy_until <= clock and not rep_out(r, clock)]
                 if cands:
                     target = cands[(served_fast + served_slow)
                                    % len(cands)]
@@ -146,9 +237,17 @@ def simulate_dispatch(policy: str, *, n_fast=4, n_slow=4, slow_factor=3.0,
                         pick = i
                         target = rs
             if target is not None:
-                a, svc, dead = queue[pick]
+                a, svc, dead, to_dead, tries = queue[pick]
                 queue.pop(pick)
                 dur = svc * target.speed
+                if chaos_faults is not None:
+                    # Straggle spike first, preemption stall on top —
+                    # the device sim's grant() composition order.
+                    d_ix = min(target.served, cap_disp - 1)
+                    if spikes[target.idx][d_ix]:
+                        dur *= chaos_faults.straggle_scale
+                    dur += stalls[target.idx][d_ix]
+                    target.served += 1
                 target.busy_until = clock + dur
                 heapq.heappush(events, clock + dur)
                 latency = clock + dur - a
@@ -165,7 +264,10 @@ def simulate_dispatch(policy: str, *, n_fast=4, n_slow=4, slow_factor=3.0,
     # 5% warmup prefix (counting after the trim undercounted throughput by
     # exactly that warmup fraction).
     completed = len(lat)
+    full_lat = lat
     lat = np.array(lat[int(0.05 * len(lat)):] or [np.inf])
+    good = int(np.sum(np.array(full_lat or [np.inf]) <= slo)) \
+        if slo is not None else None
     return {
         "policy": policy,
         "n": len(lat),
@@ -177,4 +279,11 @@ def simulate_dispatch(policy: str, *, n_fast=4, n_slow=4, slow_factor=3.0,
         "served_slow": served_slow,
         "final_window": win.window,
         "slo_violation": float(np.mean(lat > slo)) if slo else None,
+        # resilience counters + goodput (SLO-met completions per second)
+        "timeouts": timeouts,
+        "retries": retried,
+        "drops": drops,
+        "lost": lost,
+        "goodput_rps": float(good / max(clock, 1e-9))
+        if good is not None else None,
     }

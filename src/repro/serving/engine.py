@@ -26,7 +26,9 @@ Two clock modes:
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import itertools
+from collections import defaultdict
 
 import numpy as np
 
@@ -46,6 +48,12 @@ class Request:
     generated: int = 0
     first_token_t: float | None = None
     finish_t: float | None = None
+    # resilience lifecycle (engine timeout/retry/admission — all inert
+    # unless the engine was built with the chaos kwargs)
+    deadline_t: float = float("inf")
+    retries: int = 0
+    dropped: bool = False
+    timed_out: bool = False
 
 
 @dataclasses.dataclass
@@ -60,8 +68,22 @@ class CostModel:
 
 
 class ServingEngine:
+    """``timeout_s`` / ``max_retries`` / ``backoff_base_s`` /
+    ``backoff_cap_s`` / ``admit_limit`` are the resilience knobs
+    (docs/faults.md §Serving): a request whose TTFT deadline
+    (arrival + timeout_s) passes before its first token is cancelled at
+    dequeue and retried after a capped exponential backoff (restarting
+    its prefill), up to ``max_retries`` times; ``admit_limit`` is
+    admission control — arrivals are shed outright while more than that
+    many requests are pending + running (load past saturation).  All
+    default off, in which case behavior is bit-identical to the
+    pre-chaos engine."""
+
     def __init__(self, scheduler: str = "asl", cost: CostModel = None,
-                 *, scheduler_kwargs: dict = None, seed: int = 0):
+                 *, scheduler_kwargs: dict = None, seed: int = 0,
+                 timeout_s: float = None, max_retries: int = 0,
+                 backoff_base_s: float = 0.05, backoff_cap_s: float = 2.0,
+                 admit_limit: int = None):
         self.cost = cost or CostModel()
         self.clock = 0.0
         kw = dict(scheduler_kwargs or {})
@@ -77,6 +99,19 @@ class ServingEngine:
         self.itl_samples: list[float] = []    # inter-token gaps (decode)
         self._last_decode_t: float | None = None
         self._rid = itertools.count()
+        # Resilience knobs + per-class (epoch_id) fault counters.
+        self.timeout_s = timeout_s
+        self.max_retries = max_retries
+        self.backoff_base_s = backoff_base_s
+        self.backoff_cap_s = backoff_cap_s
+        self.admit_limit = admit_limit
+        self.timeouts: dict[int, int] = defaultdict(int)
+        self.retry_counts: dict[int, int] = defaultdict(int)
+        self.drops: dict[int, int] = defaultdict(int)
+        self.shed: list[Request] = []         # admission-dropped
+        self.expired: list[Request] = []      # timed out, retries spent
+        self._retry_q: list = []              # (due_t, seq, Request)
+        self._retry_seq = itertools.count()
         # ``seed`` is kept for API compatibility; all workload randomness
         # now lives in repro.workloads (counter-based, engine-independent).
         del seed
@@ -87,8 +122,48 @@ class ServingEngine:
         r = Request(next(self._rid),
                     self.clock if arrival_t is None else arrival_t,
                     prompt_len, max_new_tokens, slo_ttft, epoch_id)
+        if self.admit_limit is not None and \
+                self.sched.pending() + len(self.running) >= self.admit_limit:
+            # Admission control: past saturation, shedding at arrival
+            # keeps the queue (and every admitted request's wait) bounded.
+            r.dropped = True
+            self.drops[epoch_id] += 1
+            self.shed.append(r)
+            return r
+        if self.timeout_s is not None:
+            r.deadline_t = r.arrival_t + self.timeout_s
         self.sched.submit(r, klass="little", epoch_id=epoch_id)
         return r
+
+    # -- resilience helpers --------------------------------------------
+    def retry_pending(self) -> int:
+        """Requests waiting out a retry backoff (drivers must not skip
+        the clock past them when the queue is otherwise empty)."""
+        return len(self._retry_q)
+
+    def _release_retries(self):
+        while self._retry_q and self._retry_q[0][0] <= self.clock:
+            _, _, r = heapq.heappop(self._retry_q)
+            r.deadline_t = self.clock + self.timeout_s
+            self.sched.submit(r, klass="little", epoch_id=r.epoch_id)
+
+    def _expired(self, r: Request) -> bool:
+        return self.timeout_s is not None and r.first_token_t is None \
+            and self.clock > r.deadline_t
+
+    def _on_timeout(self, r: Request):
+        self.timeouts[r.epoch_id] += 1
+        if r.retries < self.max_retries:
+            r.retries += 1
+            self.retry_counts[r.epoch_id] += 1
+            backoff = min(self.backoff_base_s * 2 ** (r.retries - 1),
+                          self.backoff_cap_s)
+            r.prefill_done = 0        # a retried request restarts prefill
+            heapq.heappush(self._retry_q,
+                           (self.clock + backoff, next(self._retry_seq), r))
+        else:
+            r.timed_out = True
+            self.expired.append(r)
 
     def _admit_decode_slot(self):
         """Decode work is 'big': register one slot-claim per loop if any
@@ -99,10 +174,25 @@ class ServingEngine:
     # ------------------------------------------------------------------
     def step(self) -> str:
         """Run one engine slot; returns what ran ('decode'/'prefill'/'idle')."""
+        if self._retry_q:
+            self._release_retries()
         self._admit_decode_slot()
         item = self.sched.next_item()
+        # Timeout detection happens at dequeue (the scheduler is a
+        # pluggable black box): expired prefill work is cancelled and
+        # handed to the retry/expire path, and the slot goes to the next
+        # item — the engine never burns a slot on a dead request.
+        while item is not None and item.klass == "little" \
+                and self._expired(item.payload):
+            self._on_timeout(item.payload)
+            item = self.sched.next_item()
         if item is None:
-            self.clock += 1e-4
+            if self._retry_q:
+                # Nothing runnable until the next backoff elapses.
+                self.clock = max(self.clock, self._retry_q[0][0])
+                self._release_retries()
+            else:
+                self.clock += 1e-4
             return "idle"
 
         if item.klass == "big":
@@ -163,11 +253,21 @@ class ServingEngine:
         return self
 
     # ------------------------------------------------------------------
+    def _fault_counters(self) -> dict:
+        return {
+            "timeouts": dict(self.timeouts),
+            "retries": dict(self.retry_counts),
+            "drops": dict(self.drops),
+            "timeouts_total": sum(self.timeouts.values()),
+            "retries_total": sum(self.retry_counts.values()),
+            "drops_total": sum(self.drops.values()),
+        }
+
     def metrics(self, warmup_frac: float = 0.1) -> dict:
         reqs = [r for r in self.done if r.first_token_t is not None]
         reqs = reqs[int(len(reqs) * warmup_frac):]
         if not reqs:
-            return {"n": 0}
+            return {"n": 0, **self._fault_counters()}
         ttft = np.array([r.first_token_t - r.arrival_t for r in reqs])
         e2e = np.array([r.finish_t - r.arrival_t for r in reqs])
         toks = sum(r.generated for r in reqs)
@@ -175,6 +275,11 @@ class ServingEngine:
         viol = np.mean([t > r.slo_ttft for t, r in zip(ttft, reqs)])
         itl = np.array(self.itl_samples[int(len(self.itl_samples)
                                             * warmup_frac):] or [0.0])
+        # Goodput: completions that met their TTFT SLO — shed, expired
+        # and SLO-late requests all count against it (the chaos figures'
+        # useful-work-per-second metric).
+        good = [r for t, r in zip(ttft, reqs) if t <= r.slo_ttft]
+        offered = len(reqs) + len(self.shed) + len(self.expired)
         return {
             "n": len(reqs),
             "throughput_tok_s": toks / max(span, 1e-9),
@@ -184,6 +289,11 @@ class ServingEngine:
             "itl_p50": float(np.percentile(itl, 50)),
             "itl_p99": float(np.percentile(itl, 99)),
             "slo_violation_rate": float(viol),
+            "goodput_req_s": len(good) / max(span, 1e-9),
+            "goodput_tok_s": sum(r.generated for r in good)
+            / max(span, 1e-9),
+            "goodput_frac": len(good) / max(offered, 1),
+            **self._fault_counters(),
         }
 
 
@@ -214,7 +324,8 @@ def replay_workload(engine: ServingEngine, trace, *, slo_ttft: float = None,
             engine.submit(int(pl[ai]), int(nt[ai]), slo, epoch_id=k,
                           arrival_t=float(trace.arrival_t[ai]))
             ai += 1
-        if ai < n and not engine.sched.pending() and not engine.running:
+        if ai < n and not engine.sched.pending() and not engine.running \
+                and not engine.retry_pending():
             engine.clock = float(trace.arrival_t[ai])  # skip idle gaps
             continue
         engine.step()
@@ -271,7 +382,8 @@ def closed_loop_workload(engine: ServingEngine, *, n_clients: int,
                 subs[c] += 1
                 inflight[r.rid] = c
                 next_t[c] = float("inf")
-        if not engine.sched.pending() and not engine.running:
+        if not engine.sched.pending() and not engine.running \
+                and not engine.retry_pending():
             t_min = min((t for t in next_t if t < float("inf")),
                         default=None)
             if t_min is None or t_min >= duration_s:

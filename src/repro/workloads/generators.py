@@ -48,6 +48,11 @@ STREAM_PHASE = 0x7783
 STREAM_CLASS = 0x7784
 STREAM_COLS = 0x7785
 STREAM_STRAGGLE = 0x7786
+# Fault-injection streams (repro.faults): holder preemption decisions /
+# durations, core-churn on/off slots, straggler service spikes.
+STREAM_PREEMPT = 0x7787
+STREAM_CHURN = 0x7788
+STREAM_SPIKE = 0x7789
 
 
 # --------------------------------------------------------------------------

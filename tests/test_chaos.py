@@ -1,0 +1,205 @@
+"""Chaos-layer tests: FaultSpec/SimConfig validation, the host fault
+schedules, and timeout/retry/admission-control in the serving engine +
+dispatch fleet (docs/faults.md).
+
+Device-sim fault conformance (parity, liveness, zero-rate purity) lives
+in tests/test_policies.py; sweep resume in tests/test_sweep.py.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import simlock as sl
+from repro.faults import FaultSpec, host as flt_host
+from repro.serving.dispatch import simulate_dispatch
+from repro.serving.engine import CostModel, Request, ServingEngine
+
+# ---------------------------------------------------------------------------
+# FaultSpec validation
+# ---------------------------------------------------------------------------
+
+
+def test_faultspec_defaults_inactive():
+    assert not FaultSpec().active
+    assert FaultSpec(preempt_rate=0.1).active
+    assert FaultSpec(churn_rate=0.1).active
+    assert FaultSpec(straggle_rate=0.1).active
+
+
+@pytest.mark.parametrize("kw", [
+    dict(preempt_rate=-0.1), dict(preempt_rate=1.5),
+    dict(churn_rate=2.0), dict(straggle_rate=float("nan")),
+    dict(preempt_scale=-1.0), dict(churn_period=0.0),
+    dict(straggle_scale=0.5),
+])
+def test_faultspec_rejects_bad_values(kw):
+    with pytest.raises(ValueError):
+        FaultSpec(**kw)
+
+
+# ---------------------------------------------------------------------------
+# SimConfig validation (construction-time, not trace-time)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw", [
+    dict(preempt_rate=-0.1), dict(preempt_rate=1.5),
+    dict(churn_rate=float("nan")), dict(churn_period_us=0.0),
+    dict(straggle_scale=0.5), dict(sim_time_us=-1.0),
+    dict(sim_time_us=float("nan")), dict(n_cores=0),
+    dict(seg_cs_us=(3.0, 1.0)),              # length != seg_lock's
+    dict(seg_noncrit_us=(-1.0,)), dict(wl_rate=0.0),
+    dict(fault_mask=(float("nan"),) * 8),
+])
+def test_simconfig_rejects_bad_values(kw):
+    with pytest.raises(ValueError):
+        sl.SimConfig(policy="fifo", **kw)
+
+
+def test_simconfig_unknown_policy_suggests():
+    with pytest.raises(ValueError, match="libasl"):
+        sl.SimConfig(policy="libasal")
+    with pytest.raises(ValueError, match="unknown lock policy"):
+        sl.SimConfig(policy="zzz-not-a-policy")
+
+
+# ---------------------------------------------------------------------------
+# Host fault schedules (repro.faults.host): counter-pure + zero-rate off
+# ---------------------------------------------------------------------------
+
+def test_outage_mask_deterministic_and_zero_off():
+    spec = FaultSpec(churn_rate=0.4, churn_period=1.0)
+    a = flt_host.outage_mask(spec, 4, 30.0, seed=7)
+    b = flt_host.outage_mask(spec, 4, 30.0, seed=7)
+    np.testing.assert_array_equal(a, b)
+    assert a.any() and not a.all()
+    off = flt_host.outage_mask(FaultSpec(), 4, 30.0, seed=7)
+    assert not off.any()
+
+
+def test_stalls_and_spikes_zero_rate_are_silent():
+    assert not flt_host.spike_hits(FaultSpec(), 0, 64, seed=0).any()
+    assert (flt_host.preempt_stalls(FaultSpec(), 0, 64, seed=0) == 0).all()
+    spec = FaultSpec(preempt_rate=0.5, preempt_scale=0.1,
+                     straggle_rate=0.5)
+    assert flt_host.spike_hits(spec, 0, 256, seed=0).any()
+    st = flt_host.preempt_stalls(spec, 0, 256, seed=0)
+    assert (st >= 0).all() and st.max() > 0
+
+
+# ---------------------------------------------------------------------------
+# Serving engine: timeout / retry / backoff / admission / goodput
+# ---------------------------------------------------------------------------
+
+def _slow_prefill_cost():
+    # One chunk = 0.5s of clock: requests with >1 chunk left are easy to
+    # expire against a sub-second timeout.
+    return CostModel(prefill_chunk_s=0.5, prefill_chunk=512,
+                     decode_step_s=1e-3)
+
+
+def test_engine_defaults_have_inert_counters():
+    eng = ServingEngine("fifo", _slow_prefill_cost())
+    for _ in range(4):
+        eng.submit(512, 4, slo_ttft=10.0)
+    eng.run(until_done=4)
+    m = eng.metrics(warmup_frac=0.0)
+    assert m["timeouts_total"] == 0
+    assert m["retries_total"] == 0
+    assert m["drops_total"] == 0
+    assert m["n"] == 4 and m["goodput_frac"] == 1.0
+
+
+def test_engine_timeout_and_retry_counters():
+    eng = ServingEngine("fifo", _slow_prefill_cost(),
+                        timeout_s=0.4, max_retries=1)
+    for _ in range(6):                    # 2 chunks each: 1s of prefill
+        eng.submit(1024, 2, slo_ttft=10.0)
+    eng.run(until_t=8.0)
+    m = eng.metrics(warmup_frac=0.0)
+    assert m["timeouts_total"] > 0
+    assert m["retries_total"] > 0
+    # every request either finished or exhausted its retries
+    assert len(eng.done) + len(eng.expired) == 6
+    assert all(r.timed_out for r in eng.expired)
+
+
+def test_engine_retry_backoff_is_capped_exponential():
+    eng = ServingEngine("fifo", timeout_s=1.0, max_retries=10,
+                        backoff_base_s=0.1, backoff_cap_s=0.4)
+    r = Request(0, 0.0, 512, 1, 1.0)
+    dues = []
+    for _ in range(5):
+        eng._on_timeout(r)
+        dues.append(eng._retry_q[-1][0] - eng.clock)
+        eng._retry_q.clear()
+    assert dues == [0.1, 0.2, 0.4, 0.4, 0.4]
+
+
+def test_engine_admission_control_sheds():
+    eng = ServingEngine("fifo", _slow_prefill_cost(), admit_limit=2)
+    rs = [eng.submit(512, 2, slo_ttft=10.0) for _ in range(5)]
+    m = eng.metrics(warmup_frac=0.0)
+    assert m["drops_total"] == 3
+    assert [r.dropped for r in rs] == [False, False, True, True, True]
+    assert len(eng.shed) == 3
+    eng.run(until_done=2)
+    assert len(eng.done) == 2
+
+
+def test_engine_goodput_counts_shed_and_expired_against():
+    eng = ServingEngine("fifo", _slow_prefill_cost(),
+                        timeout_s=0.6, admit_limit=2)
+    eng.submit(512, 2, slo_ttft=10.0)     # 1 chunk: completes in time
+    eng.submit(2048, 2, slo_ttft=10.0)    # 4 chunks: expires
+    for _ in range(4):
+        eng.submit(512, 2, slo_ttft=10.0)   # past the limit: shed
+    eng.run(until_t=8.0)
+    m = eng.metrics(warmup_frac=0.0)
+    assert m["n"] == 1 and len(eng.shed) == 4 and len(eng.expired) == 1
+    # 1 good completion out of 6 offered: shed + expired count against
+    assert m["goodput_frac"] == pytest.approx(1 / 6)
+    assert m["goodput_req_s"] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Dispatch fleet chaos
+# ---------------------------------------------------------------------------
+
+def test_dispatch_zero_chaos_counters_inert():
+    m = simulate_dispatch("asl", duration_s=20.0, slo=0.6, seed=1)
+    assert m["timeouts"] == m["retries"] == m["drops"] == m["lost"] == 0
+    assert m["goodput_rps"] is not None
+    m2 = simulate_dispatch("asl", duration_s=20.0, slo=0.6, seed=1,
+                           faults=FaultSpec())
+    assert m == m2                      # inactive FaultSpec is a no-op
+
+
+def test_dispatch_timeout_retry_admission():
+    m = simulate_dispatch("asl", duration_s=20.0, slo=0.6, seed=1,
+                          rate_rps=150.0, timeout_s=0.4, max_retries=2)
+    assert m["timeouts"] > 0 and m["retries"] > 0 and m["lost"] > 0
+    assert m["goodput_rps"] <= m["throughput_rps"]
+    m2 = simulate_dispatch("asl", duration_s=20.0, slo=0.6, seed=1,
+                           rate_rps=150.0, admit_cap=10)
+    assert m2["drops"] > 0
+
+
+def test_dispatch_faults_degrade_tail():
+    f = FaultSpec(churn_rate=0.3, churn_period=2.0, straggle_rate=0.1,
+                  straggle_scale=5.0, preempt_rate=0.05, preempt_scale=0.5)
+    base = simulate_dispatch("fair", duration_s=30.0, slo=0.6, seed=3)
+    chaos = simulate_dispatch("fair", duration_s=30.0, slo=0.6, seed=3,
+                              faults=f)
+    assert chaos["p99"] > base["p99"]
+    assert chaos["completed"] > 0       # no deadlock under churn
+
+
+def test_dispatch_full_chaos_terminates():
+    f = FaultSpec(churn_rate=0.5, churn_period=1.0, preempt_rate=0.2,
+                  preempt_scale=1.0, straggle_rate=0.2, straggle_scale=8.0)
+    m = simulate_dispatch("asl", duration_s=20.0, slo=0.6, seed=0,
+                          timeout_s=1.0, max_retries=3, admit_cap=100,
+                          faults=f)
+    assert m["completed"] > 0

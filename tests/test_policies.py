@@ -247,6 +247,126 @@ def test_open_loop_latency_diverges_past_saturation():
     assert lo["ep_p99_all_us"] < 1_000.0
 
 
+# ---------------------------------------------------------------------------
+# Fault injection (repro.faults): the conformance net under chaos —
+# every registered policy keeps its engine invariants with preemption,
+# churn and straggler spikes enabled, and zero-rate injection is
+# provably a no-op.
+# ---------------------------------------------------------------------------
+
+FAULT_KW = dict(preempt_rate=0.1, preempt_scale_us=30.0,
+                churn_rate=0.2, churn_period_us=200.0,
+                straggle_rate=0.05, straggle_scale=10.0)
+
+
+def _fault_cfg(policy, sim_time_us=6_000.0, **kw):
+    return _cfg(policy, sim_time_us=sim_time_us, **{**FAULT_KW, **kw})
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_faulted_batched_matches_single(policy):
+    """Fault draws are counter-pure per (core, CS index): a faulted
+    sweep cell == the dedicated faulted single run, exactly."""
+    cfg = _fault_cfg(policy)
+    st, grid = sl.sweep(cfg, {"seed": [0, 3]}, slo_us=SLO_US)
+    for i, seed in enumerate(grid["seed"]):
+        _close(sl.summarize(cfg, _cell(st, i)),
+               sl.summarize(cfg, sl.run(cfg, SLO_US, seed=int(seed))))
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_faulted_chunk_invariance(policy):
+    cfg = _fault_cfg(policy, sim_time_us=3_000.0)
+    r1 = sl.run(dataclasses.replace(cfg, chunk=1), SLO_US, seed=3)
+    r128 = sl.run(dataclasses.replace(cfg, chunk=128), SLO_US, seed=3)
+    for x, y in zip(jax.tree.leaves(r1), jax.tree.leaves(r128)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_no_deadlock_no_starvation_under_faults(policy):
+    """Liveness under combined chaos: a churned-out core always rejoins
+    (finite t_ready), a preempted holder always releases — every core
+    keeps retiring epochs and the sim reaches its horizon."""
+    cfg = _fault_cfg(policy, sim_time_us=30_000.0)
+    st = sl.run(cfg, SLO_US)
+    s = sl.summarize(cfg, st)
+    ep = np.asarray(st.ep_cnt)
+    assert (ep > 0).all(), f"{policy}: starved cores {np.where(ep == 0)[0]}"
+    assert s["sim_time_us"] >= 0.9 * cfg.sim_time_us
+    assert s["events"] < cfg.max_events
+
+
+@pytest.mark.parametrize("policy", ("fifo", "libasl"))
+def test_zero_rate_faults_bit_identical(policy):
+    """Gate-on, rate-zero injection == fault-free run, bit for bit (the
+    additive-where fault arithmetic cannot perturb a zero-rate run)."""
+    plain = _cfg(policy, sim_time_us=3_000.0)
+    st_plain = sl.run(plain, SLO_US, seed=1)
+    # sweep() flips the static gates on (the axes reach nonzero values);
+    # cell 0 runs every rate at 0.0.
+    st_sw, _ = sl.sweep(plain, {"preempt_rate": [0.0, 0.1],
+                                "churn_rate": [0.0, 0.2],
+                                "straggle_rate": [0.0, 0.05]},
+                        product=False, slo_us=SLO_US, seed=1)
+    for x, y in zip(jax.tree.leaves(_cell(st_sw, 0)),
+                    jax.tree.leaves(st_plain)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_all_zero_fault_mask_bit_identical():
+    """ft_mask multiplies the rates: an all-zero eligibility mask turns
+    nonzero fault rates into a bit-exact no-op."""
+    plain = _cfg("fifo", sim_time_us=3_000.0)
+    masked = _fault_cfg("fifo", sim_time_us=3_000.0,
+                        fault_mask=(0.0,) * plain.n_cores,
+                        churn_rate=0.0)   # churn keys off t, not ft_mask
+    a = sl.run(plain, SLO_US, seed=2)
+    b = sl.run(masked, SLO_US, seed=2)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_preemption_asymmetry_mask_spares_big_cores():
+    """fault_mask picks the victims: with only little cores eligible,
+    big-core-affine grants dodge every stall — throughput under heavy
+    preemption must beat the all-cores-eligible run."""
+    little_only = _fault_cfg("fifo", sim_time_us=20_000.0,
+                             preempt_rate=0.3, churn_rate=0.0,
+                             straggle_rate=0.0,
+                             fault_mask=(0.0,) * 4 + (1.0,) * 4)
+    all_cores = _fault_cfg("fifo", sim_time_us=20_000.0,
+                           preempt_rate=0.3, churn_rate=0.0,
+                           straggle_rate=0.0)
+    a = sl.summarize(little_only, sl.run(little_only, 1e9))
+    b = sl.summarize(all_cores, sl.run(all_cores, 1e9))
+    assert a["throughput_cs_per_s"] > b["throughput_cs_per_s"]
+
+
+def test_preemption_craters_fifo_throughput():
+    """The chaos_collapse headline: preemption stalls land on the whole
+    FIFO convoy, so throughput must drop steeply with the rate."""
+    cfg = _cfg("fifo", sim_time_us=20_000.0, preempt_rate=0.2,
+               preempt_scale_us=50.0)
+    st, grid = sl.sweep(cfg, {"preempt_rate": [0.0, 0.2]}, slo_us=1e9)
+    rows = sl.sweep_summaries(cfg, st, grid)
+    assert rows[1]["throughput_cs_per_s"] < \
+        0.7 * rows[0]["throughput_cs_per_s"]
+
+
+def test_goodput_metric():
+    """summarize(slo_us=...) reports the SLO-met fraction and scales
+    throughput by it; an infinite SLO makes goodput == throughput."""
+    cfg = _cfg("fifo", sim_time_us=6_000.0)
+    st = sl.run(cfg, 1e9)
+    s = sl.summarize(cfg, st, slo_us=1e12)
+    assert s["slo_good_frac"] == 1.0
+    assert s["goodput_eps"] == s["throughput_epochs_per_s"]
+    tight = sl.summarize(cfg, st, slo_us=1e-6)
+    assert tight["slo_good_frac"] == 0.0
+    assert tight["goodput_eps"] == 0.0
+
+
 def test_open_loop_arrivals_policy_independent():
     """Open-loop discipline: the arrival stream is workload state —
     counter-pure draws the policy under test cannot perturb.  At deep

@@ -120,6 +120,60 @@ def test_sweep_rejects_unknown_axis_and_oversize_n():
 
 
 # ---------------------------------------------------------------------------
+# Resumable sweeps (sweep(resume_dir=...) over repro.ckpt.checkpointer)
+# ---------------------------------------------------------------------------
+
+def test_sweep_resume_bit_parity_after_kill(tmp_path, monkeypatch):
+    """Kill-and-resume: a sweep interrupted after its first chunk and
+    re-launched into the same directory must (a) not re-execute the
+    completed chunk and (b) return results bit-identical to an
+    uninterrupted run."""
+    cfg = sl.SimConfig(policy="libasl", sim_time_us=3_000.0)
+    axes = {"slo_us": [30.0, 50.0, 70.0, 90.0, 110.0], "seed": [0, 1]}
+    want, _ = sl.sweep(cfg, axes)
+
+    d = tmp_path / "resume"
+    calls = {"n": 0}
+    real_exec = sl._batch_executable
+
+    def counting_exec(*a, **kw):
+        calls["n"] += 1
+        if calls["n"] == 2 and not (d / "poisoned").exists():
+            (d / "poisoned").touch()
+            raise KeyboardInterrupt("simulated kill mid-sweep")
+        return real_exec(*a, **kw)
+
+    monkeypatch.setattr(sl, "_batch_executable", counting_exec)
+    with pytest.raises(KeyboardInterrupt):
+        sl.sweep(cfg, axes, resume_dir=d, resume_chunk=4)
+    killed_at = calls["n"]
+    st, grid = sl.sweep(cfg, axes, resume_dir=d, resume_chunk=4)
+    # chunk 0 (4 cells) was restored from disk, not re-executed
+    assert calls["n"] == killed_at + 2
+    assert len(grid["slo_us"]) == 10
+    for x, y in zip(jax.tree.leaves(want), jax.tree.leaves(st)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_sweep_resume_rejects_mismatched_grid(tmp_path):
+    cfg = sl.SimConfig(policy="libasl", sim_time_us=1_000.0)
+    d = tmp_path / "resume"
+    sl.sweep(cfg, {"slo_us": [30.0, 50.0]}, resume_dir=d)
+    with pytest.raises(ValueError, match="different sweep"):
+        sl.sweep(cfg, {"slo_us": [30.0, 50.0]}, seed=1, resume_dir=d)
+
+
+def test_sweep_resume_incompatible_with_mesh(tmp_path):
+    from repro.launch.mesh import make_sweep_mesh
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >1 (virtual) device")
+    cfg = sl.SimConfig(policy="fifo", sim_time_us=1_000.0)
+    with pytest.raises(ValueError, match="resume"):
+        sl.sweep(cfg, {"seed": [0, 1]}, resume_dir=tmp_path / "r",
+                 mesh=make_sweep_mesh())
+
+
+# ---------------------------------------------------------------------------
 # Mesh-sharded sweeps (conftest virtualizes 8 host devices)
 # ---------------------------------------------------------------------------
 
