@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core import energy
 from repro.core import simlock as sl
 
 BIG_SPEED = 1.0
@@ -469,6 +470,47 @@ def chaos_collapse(slo=300.0):
 
 
 # ---------------------------------------------------------------------------
+# Energy efficiency: throughput-per-watt + EDP vs big:little mix, one
+# curve per registered policy (docs/energy.md).  Little cores draw a
+# fraction of a big core's watts (energy.amp_power, Cortex-A15/A7
+# class) but also retire CS work 3.75x slower — whether racing the lock
+# onto big cores wins on J/op is the question this figure answers per
+# policy.  Every per-core table of a mix — the big bit, both speed
+# tables and the four phase-power tables — rides as one zipped traced
+# table axis, so the whole mix column is ONE executable per policy.
+# ---------------------------------------------------------------------------
+
+ENERGY_MIXES = (8, 6, 4, 2, 0)       # n_big of 8 cores
+
+
+def energy_efficiency(sim_time_us=60_000.0):
+    from repro.core.policies import REGISTRY
+    mixes = []
+    for n_big in ENERGY_MIXES:
+        big = (1,) * n_big + (0,) * (8 - n_big)
+        mixes.append(dict(
+            big=big,
+            speed_cs=tuple(1.0 if b else CS_RATIO for b in big),
+            speed_nc=tuple(1.0 if b else NC_RATIO for b in big),
+            **energy.amp_power(big)))
+    axes = {k: [m[k] for m in mixes] for k in mixes[0]}
+    rows = []
+    for pol in REGISTRY:
+        cfg = _cfg(pol, 8, sim_time_us=sim_time_us,
+                   **FIG1_KW.get(pol, {}))
+        rows += _sweep_rows(
+            cfg, axes,
+            lambda c, p=pol: f"energy/{p}/big{sum(c['big'])}",
+            slo_us=FIG1_SLO.get(pol, 1e9), product=False,
+            extra=lambda c, s: dict(
+                n_big=int(sum(c["big"])),
+                energy_j=s["energy_j"], power_w=s.get("power_w"),
+                tput_per_watt=s.get("tput_per_watt"),
+                edp=s.get("edp")))
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # Bench-6: blocking locks / oversubscription — wakeup latency on the
 # FIFO handoff path; LibASL standbys dodge it (wakeup is a traced axis)
 # ---------------------------------------------------------------------------
@@ -504,4 +546,5 @@ ALL = {
     "loadlat_sweep": loadlat_sweep,
     "openloop_loadlat": openloop_loadlat,
     "chaos_collapse": chaos_collapse,
+    "energy_efficiency": energy_efficiency,
 }

@@ -8,8 +8,11 @@ Sections:
   sim            — CI smoke gate: fig1's batched-vs-seed acceptance bench
                    (speedup floor, <= 1 executable per registered policy),
                    a policy-matrix probe (every registered lock policy
-                   runs one tiny cell) + a sharded-vs-unsharded sweep
-                   parity probe; nonzero exit on failure.
+                   runs one tiny cell), energy-layer probes (zero-power
+                   purity, energy == integral-of-power conservation, the
+                   energy_efficiency figure's one-executable-per-policy
+                   discipline) + a sharded-vs-unsharded sweep parity
+                   probe; nonzero exit on failure.
                    Opt-in (not part of the default all-sections run): it
                    virtualizes 8 host devices and pins XLA threading,
                    which would skew the other sections' baselines
@@ -167,6 +170,16 @@ def _headline(name, rows) -> str:
                     f"{1 - h['fifo']['tput'] / z['fifo']['tput']:.0%};"
                     f"libasl_goodput_vs_fifo="
                     f"{h['libasl']['goodput_eps'] / h['fifo']['goodput_eps']:.2f}x")
+        if name == "energy_efficiency":
+            full = {r["policy"]: r for r in rows if r["n_big"] == 8}
+            lit = {r["policy"]: r for r in rows if r["n_big"] == 0}
+            best = max(rows, key=lambda r: r["tput_per_watt"])
+            return (f"little_power_vs_big="
+                    f"{lit['fifo']['power_w'] / full['fifo']['power_w']:.2f}x;"
+                    f"little_tput_vs_big="
+                    f"{lit['fifo']['tput'] / full['fifo']['tput']:.2f}x;"
+                    f"best_tputW={best['name']}"
+                    f"@{best['tput_per_watt']:.0f}")
         if name == "straggler_training":
             by = {r["name"].split("/")[-1]: r for r in rows}
             return (f"asl_vs_sync={by['asl-staleness']['steps_per_s'] / by['sync']['steps_per_s']:.2f}x;"
@@ -239,6 +252,78 @@ def _policy_matrix_probe(results) -> bool:
     return ok
 
 
+def _energy_probe(results) -> bool:
+    """CI probes for the energy/DVFS layer (docs/energy.md):
+
+    1. purity — for every registered policy, a zero-power default-DVFS
+       run is bit-identical to a gate-off run on every SimState leaf
+       (the layer off is provably a no-op);
+    2. conservation — uniform 1 W in every phase integrates to
+       n_cores x sim-seconds (energy == integral of power dt, the
+       telescoping event-step sum);
+    3. batching + asymmetry — the energy_efficiency figure compiles at
+       most one executable per registered policy, and the all-little
+       mix draws less power AND less throughput than the all-big mix.
+    """
+    import jax
+    import numpy as np
+
+    from benchmarks import paper_figs
+    from repro.core import simlock as sl
+    from repro.core.policies import REGISTRY
+
+    horizon = 4_000.0
+    pure_ok = True
+    for name in sorted(REGISTRY):
+        base = sl.SimConfig(policy=name, sim_time_us=horizon)
+        zero = sl.with_columns(base, dvfs=(1.0,) * 8,
+                               p_cs=(0.0,) * 8, p_spin=(0.0,) * 8,
+                               p_park=(0.0,) * 8, p_idle=(0.0,) * 8)
+        a, b = sl.run(base, 60.0), sl.run(zero, 60.0)
+        pure_ok = pure_ok and all(
+            np.array_equal(np.asarray(x), np.asarray(y))
+            for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+    _emit("sim/energy_purity", 0.0,
+          f"policies={len(REGISTRY)};zero_power_bit_identical={pure_ok};"
+          + ("PASS" if pure_ok else "FAIL"))
+
+    cfg = sl.with_columns(
+        sl.SimConfig(policy="fifo", sim_time_us=horizon),
+        p_cs=(1.0,) * 8, p_spin=(1.0,) * 8, p_park=(1.0,) * 8,
+        p_idle=(1.0,) * 8)
+    s = sl.summarize(cfg, jax.tree.map(np.asarray, sl.run(cfg, 1e9)))
+    want = cfg.n_cores * cfg.sim_time_us * 1e-6
+    cons_ok = abs(s["energy_j"] - want) <= 0.02 * want
+    _emit("sim/energy_conservation", 0.0,
+          f"energy_j={s['energy_j']:.4f}_vs_integral={want:.4f};"
+          + ("PASS" if cons_ok else "FAIL"))
+
+    n0 = sl.n_batch_executables()
+    rows = paper_figs.energy_efficiency()
+    execs = sl.n_batch_executables() - n0
+    results["sim/energy_efficiency"] = rows
+    batch_ok = execs <= len(REGISTRY)
+    lit = {r["policy"]: r for r in rows if r["n_big"] == 0}
+    full = {r["policy"]: r for r in rows if r["n_big"] == 8}
+    amp_ok = all(lit[p]["power_w"] < full[p]["power_w"]
+                 and lit[p]["tput"] < full[p]["tput"] for p in lit)
+    _emit("sim/energy_efficiency", 0.0,
+          f"execs={execs}(<= {len(REGISTRY)});"
+          f"littles_less_power_and_tput={amp_ok};"
+          + ("PASS" if batch_ok and amp_ok else "FAIL"))
+
+    ok = bool(pure_ok and cons_ok and batch_ok and amp_ok)
+    results["sim/energy_gate"] = {
+        "zero_power_bit_identical": bool(pure_ok),
+        "conservation_energy_j": float(s["energy_j"]),
+        "conservation_want_j": float(want),
+        "figure_executables": int(execs),
+        "registry_size": len(REGISTRY),
+        "littles_less_power_and_tput": bool(amp_ok),
+        "pass": ok}
+    return ok
+
+
 def _sim_section(results, quick: bool) -> bool:
     """CI smoke gate for the simulator engine.  Runs the fig1 batched-vs-
     seed acceptance bench (the BENCH_simlock.json protocol, abridged) and
@@ -266,6 +351,7 @@ def _sim_section(results, quick: bool) -> bool:
           f"{'PASS' if gate else 'FAIL'}")
 
     gate = _policy_matrix_probe(results) and gate
+    gate = _energy_probe(results) and gate
 
     if len(jax.devices()) < 2:
         # The sharded half of the gate cannot run — that is itself a gate

@@ -102,7 +102,7 @@ def bench_fig1_batched_vs_seed(quick: bool) -> dict:
     # --- batched sweep engine: one executable per policy, the policies
     # dispatched concurrently (independent executables; XLA releases the
     # GIL, so they overlap on the container's cores).  Concurrency is
-    # capped at cores+1: with the registry at 6 policies, 6 concurrent
+    # capped at cores+1: with the registry at 7 policies, 7 concurrent
     # XLA compiles on 2 cores thrash (measured 59s cold vs 43s at 3
     # workers).  The seed path below stays sequential — exactly how the
     # seed ran it.  Mesh-sharded sweeps must NOT overlap in one process:

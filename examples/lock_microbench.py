@@ -19,25 +19,32 @@ sys.path.insert(0, str(_ROOT))          # benchmarks.* (loadlat helper)
 import jax                                  # noqa: E402
 import numpy as np                          # noqa: E402
 
+from repro.core import energy               # noqa: E402
 from repro.core import simlock as sl        # noqa: E402
 from repro.core.policies import REGISTRY    # noqa: E402
 
 
 def policy_matrix(slo_us=100.0, sim_time_us=20_000.0):
     """One row per *registered* lock policy, same 4+4 AMP workload —
-    a new policy plugin shows up here (and in the CI probe) for free."""
+    a new policy plugin shows up here (and in the CI probe) for free.
+    The energy columns use the calibrated big.LITTLE power tables
+    (repro.core.energy, docs/energy.md): J burnt over the run,
+    throughput-per-watt and the energy-delay product."""
     print(f"== Policy matrix: {len(REGISTRY)} registered policies "
           f"(SLO {slo_us:.0f}us) ==")
     print(f"{'policy':>8} {'tput':>9} {'little p99':>11} {'big p99':>9} "
-          f"{'little share':>13}")
+          f"{'little share':>13} {'J':>7} {'tput/W':>8} {'EDP':>9}")
     for name in REGISTRY:
         cfg = sl.SimConfig(policy=name, sim_time_us=sim_time_us)
+        cfg = sl.with_columns(cfg, **energy.amp_power(cfg.big))
         s = sl.summarize(cfg, sl.run(cfg, slo_us))
         cs = np.asarray(s["cs_per_core"], float)
         share = cs[4:].sum() / max(cs.sum(), 1.0)
         print(f"{name:>8} {s['throughput_cs_per_s']:>9.0f} "
               f"{s['ep_p99_little_us']:>10.1f}u "
-              f"{s['ep_p99_big_us']:>8.1f}u {share:>12.0%}")
+              f"{s['ep_p99_big_us']:>8.1f}u {share:>12.0%} "
+              f"{s['energy_j']:>7.4f} {s['tput_per_watt']:>8.0f} "
+              f"{s['edp']:>9.2e}")
 
 
 def figure1(ns=range(1, 9), sim_time_us=40_000.0):

@@ -1,0 +1,65 @@
+"""DVFS + power model for the AMP lock simulator (docs/energy.md).
+
+The paper's premise is that asymmetric multicores exist for *power
+efficiency*; this layer adds the watts.  Five registered per-core
+``SimTables`` columns (repro.core.columns):
+
+* ``dvfs`` — per-core frequency multiplier (1.0 = nominal).  Applied
+  host-side in ``build_tables`` (segment durations divide by it — a
+  faster clock shortens both CS and non-CS work) *and* traced, so the
+  in-sim dynamic power can scale with f^3 (P_dyn ~ C V^2 f with V ~ f,
+  the classic DVFS cube law — Costero 2015, Saez 2024).
+* ``p_cs`` / ``p_spin`` / ``p_park`` / ``p_idle`` — per-core power draw
+  (watts) while computing (NONCRIT/HOLDER), busy-waiting (SPIN/STANDBY),
+  parked in a wait queue (QUEUED), and idle (open-loop ARRIVAL wait /
+  inactive padded cores).  The compute and spin draws scale with
+  ``dvfs^3``; park/idle are frequency-independent floor draws.
+
+Energy integrates in-sim: each retired event adds ``dt * power(phase)``
+per core into the ``SimState.energy`` accumulator (watt-ticks), which
+``summarize()`` surfaces as ``energy_j`` / ``power_w`` /
+``tput_per_watt`` / ``edp``.  The integration is statically gated on
+any power column being set (``simlock._energy_on``): default configs
+compile no energy ops and are bit-identical to pre-energy builds.
+
+``BIG_W`` / ``LITTLE_W`` are the default calibration: a big core draws
+~4x a little core's active power for ~2-3.75x the speed — littles win
+on throughput-per-watt under contention, the big.LITTLE trade the
+``energy_efficiency`` figure measures.
+"""
+
+from __future__ import annotations
+
+from repro.core.columns import ColumnSpec, register_column
+
+register_column(ColumnSpec(
+    name="dvfs", dtype="f32", default=1.0, field="dvfs",
+    positive=True, owner="energy",
+    doc="per-core frequency multiplier; divides segment durations, "
+        "cubes into the active/spin power draw"))
+for _name, _doc in (
+        ("p_cs", "active (compute/CS) watts, scaled by dvfs^3"),
+        ("p_spin", "busy-wait watts, scaled by dvfs^3"),
+        ("p_park", "parked-in-queue watts"),
+        ("p_idle", "idle watts (also inactive padded cores)")):
+    register_column(ColumnSpec(
+        name=_name, dtype="f32", default=0.0, field=_name,
+        owner="energy", doc=_doc))
+
+#: Default per-class power calibration (watts).  Shaped after published
+#: big.LITTLE measurements (Cortex-A15/A7 class): the big core's active
+#: draw is ~4x the little's while its speedup is only ~2-3.75x, so
+#: littles hold the throughput-per-watt edge.
+BIG_W = {"p_cs": 4.0, "p_spin": 1.6, "p_park": 0.4, "p_idle": 0.2}
+LITTLE_W = {"p_cs": 1.0, "p_spin": 0.4, "p_park": 0.12, "p_idle": 0.06}
+
+POWER_COLUMNS = ("p_cs", "p_spin", "p_park", "p_idle")
+
+
+def amp_power(big) -> dict:
+    """Per-core power tables from a big/little map: the four power-column
+    kwargs (``p_cs``/``p_spin``/``p_park``/``p_idle``) drawn from the
+    ``BIG_W``/``LITTLE_W`` calibration — splat into ``SimConfig`` or
+    ``simlock.with_columns``."""
+    return {k: tuple(BIG_W[k] if b else LITTLE_W[k] for b in big)
+            for k in POWER_COLUMNS}

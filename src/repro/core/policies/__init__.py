@@ -11,8 +11,8 @@ registry, so a new policy lands everywhere at once (see
 docs/simulator.md §Adding a lock policy).
 
 Registration order is load-bearing: it fixes the integer policy ids
-(``fifo=0, tas=1, prop=2, libasl=3, edf=4, shfl=5``) — append new
-policies, never reorder.
+(``fifo=0, tas=1, prop=2, libasl=3, edf=4, shfl=5, dvfs_race=6``) —
+append new policies, never reorder.
 """
 
 from __future__ import annotations
@@ -69,6 +69,7 @@ from repro.core.policies import prop as _prop          # noqa: E402,F401
 from repro.core.policies import libasl as _libasl      # noqa: E402,F401
 from repro.core.policies import edf as _edf            # noqa: E402,F401
 from repro.core.policies import shfl as _shfl          # noqa: E402,F401
+from repro.core.policies import dvfs_race as _dvfs_race  # noqa: E402,F401
 
 __all__ = ["LockPolicy", "REGISTRY", "register", "get", "policy_ids",
            "host_schedulers", "dispatch_names"]

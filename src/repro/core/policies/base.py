@@ -33,7 +33,11 @@ State discipline: a policy *declares* the slots it owns —
   ``SimParams.pol`` dict via :meth:`LockPolicy.init_params` (fed from
   ``SimConfig.policy_kw``, canonicalized out of the jit key);
 * ``sweep_axes`` maps sweep-axis names onto ``pol`` param slots, so a
-  policy knob sweeps like any built-in axis (one executable).
+  policy knob sweeps like any built-in axis (one executable);
+* ``own_columns`` names the per-core ``SimTables.col`` columns the
+  policy registered via :func:`repro.core.columns.register_column` —
+  declared ``(name, dtype, default, sweepable)`` specs that batch as
+  table sweep axes (docs/simulator.md §Policy-owned table columns).
 
 Registration: decorate the class with ``@register`` (see
 ``repro.core.policies``); the registry order fixes the policy ids.
@@ -126,7 +130,7 @@ def grant(st, cfg, tb, pm, cond, c, t, wakeup=False):
         # eligibility mask, and both terms are additive wheres, so a
         # zero rate is bit-identical to a fault-free run.
         gix = st.cs_cnt[c_safe]
-        eligible = tb.ft_mask[c_safe]
+        eligible = tb.col["ft_mask"][c_safe]
     if cfg.straggle_rate > 0.0:
         # Straggler spike: this CS runs straggle_scale x long (DVFS /
         # migration made the core slow) — applied before preemption so
@@ -193,8 +197,13 @@ class LockPolicy:
     uses_standby: bool = False
     #: SimParams fields this policy reads (declarative; conformance-checked).
     param_slots: tuple = ()
-    #: SimTables columns this policy reads.
+    #: SimTables slots this policy reads: core fields by name, registered
+    #: per-core columns as ``"col.<name>"`` (e.g. ``"col.slo_scale"``).
     table_slots: tuple = ()
+    #: Names of registered ``SimTables.col`` columns this policy *owns*
+    #: (it called ``repro.core.columns.register_column`` for them at
+    #: import time) — conformance asserts they exist and sweep.
+    own_columns: tuple = ()
     #: SimState fields / SimState.pol entries this policy owns.
     state_slots: tuple = ()
     #: sweep-axis name -> SimParams.pol slot (policy knobs as batch axes).

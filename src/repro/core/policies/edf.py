@@ -31,7 +31,7 @@ from repro.core.policies.base import (INF, LockPolicy, grant, queueless_acquire,
 class EdfPolicy(LockPolicy):
     name = "edf"
     param_slots = ("slo",)
-    table_slots = ("slo_scale",)
+    table_slots = ("col.slo_scale",)
 
     def on_acquire(self, st, cfg, tb, pm, c, t, cond):
         return queueless_acquire(st, cfg, tb, pm, c, t, cond)
@@ -42,7 +42,7 @@ class EdfPolicy(LockPolicy):
         # slo=1e9us) would quantize every deadline into an index-order
         # scramble; the clamp keeps the sum far from i32 overflow AND
         # bounds how long any waiter can be deferred.
-        slo_t = jnp.minimum(pm.slo * tb.slo_scale,
+        slo_t = jnp.minimum(pm.slo * tb.col["slo_scale"],
                             jnp.float32(ticks(cfg.max_window_us))
                             ).astype(jnp.int32)
         dl = jnp.where(waiting, st.epoch_start + slo_t, INF)

@@ -20,7 +20,7 @@ class LibASLPolicy(LockPolicy):
     name = "libasl"
     uses_standby = True
     param_slots = ("slo", "unit0")
-    table_slots = ("big", "slo_scale")
+    table_slots = ("big", "col.slo_scale")
     state_slots = ("window", "unit", "q", "q_head", "q_tail")
     host_scheduler = "asl"
     host_dispatch = "asl"
@@ -65,7 +65,7 @@ class LibASLPolicy(LockPolicy):
         adjust = jnp.logical_and(jnp.logical_and(last, tb.big[c] == 0),
                                  cond)
         w, u = aimd_update(st.window[c], st.unit[c], ep_latency,
-                           pm.slo * tb.slo_scale[c], pct=cfg.pct,
+                           pm.slo * tb.col["slo_scale"][c], pct=cfg.pct,
                            max_window=ticks(cfg.max_window_us))
         return st._replace(
             window=st.window.at[c].set(jnp.where(adjust, w, st.window[c])),

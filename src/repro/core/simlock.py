@@ -73,6 +73,8 @@ from repro.core.policies.base import grant as _grant
 from repro.core.policies.base import qlen as _qlen
 from repro.core.policies.base import ticks as _ticks
 from repro.core.policies.base import weighted_pick as _weighted_pick
+from repro.core import columns as colreg
+from repro.core import energy as _energy  # registers the DVFS/power columns
 from repro.dist.hlo_analysis import executable_stats
 from repro.faults import model as flt
 from repro.workloads import generators as wlg
@@ -129,11 +131,30 @@ def _validate_config(cfg) -> None:
     if not cfg.seg_cs_us:
         raise ValueError("epoch program needs at least one segment")
     for name in ("seg_noncrit_us", "seg_cs_us", "big", "speed_cs",
-                 "speed_nc", "slo_scale", "fault_mask"):
+                 "speed_nc"):
         vals = getattr(cfg, name)
         if any(v != v or v < 0 for v in vals):
             raise ValueError(f"SimConfig.{name} has a NaN/negative entry: "
                              f"{vals!r}")
+    # Registered per-core columns (repro.core.columns): numeric specs
+    # reject NaN/negative entries; ``positive`` specs (dvfs divides the
+    # segment durations) additionally reject zero.
+    for name, _ in cfg.columns:
+        spec = colreg.lookup(name)      # did-you-mean on unknown names
+        if spec.field:
+            raise ValueError(
+                f"column {name!r} has a dedicated SimConfig field "
+                f"{spec.field!r}; set that (or use with_columns)")
+    for spec in colreg.COLUMNS.values():
+        if not spec.numeric:
+            continue
+        vals = spec.raw_values(cfg)
+        if any(v != v or v < 0 for v in vals):
+            raise ValueError(f"SimConfig.{spec.axis} has a NaN/negative "
+                             f"entry: {vals!r}")
+        if spec.positive and any(v == 0 for v in vals):
+            raise ValueError(f"SimConfig.{spec.axis} entries must be "
+                             f"> 0, got {vals!r}")
     for name in ("big", "speed_cs", "speed_nc"):
         if len(getattr(cfg, name)) < cfg.n_cores:
             raise ValueError(f"SimConfig.{name} has "
@@ -201,6 +222,20 @@ class SimConfig:
     # fault rates, so it is a sweepable table axis and an all-zero mask
     # is bit-identical to a fault-free run.
     fault_mask: tuple = ()
+    # DVFS + power model (repro.core.energy, docs/energy.md).  ``dvfs``
+    # is the per-core frequency multiplier (() -> all 1.0): it divides
+    # the host-built segment durations (a faster clock shortens work)
+    # and rides traced so power can scale with f^3.  The four power
+    # tables are per-core watts by phase (active CS / busy-wait spin /
+    # parked in queue / idle); any non-empty table flips the single
+    # static energy gate on (``_energy_on``) — the in-sim energy
+    # integration only exists in the HLO when some power is modeled.
+    # All five ride as registered SimTables columns (sweepable).
+    dvfs: tuple = ()
+    p_cs: tuple = ()
+    p_spin: tuple = ()
+    p_park: tuple = ()
+    p_idle: tuple = ()
     # Stochastic workload model (repro.workloads.generators): per-epoch
     # think (arrival) and service-time scaling.  ``wl`` is the single
     # on/off jit-static bit (it gates whether the draws exist in the HLO
@@ -238,6 +273,12 @@ class SimConfig:
     # ``SimParams.pol`` dict (canonicalized out of the jit key), e.g.
     # ``policy_kw=(("shfl_bound", 8),)`` for the shfl policy.
     policy_kw: tuple = ()
+    # Values for registered per-core columns that have NO dedicated
+    # SimConfig field (plugin-owned columns, e.g. dvfs_race's
+    # ``race_w``), as a hashable ((name, per-core tuple), ...) tuple.
+    # Prefer ``with_columns(cfg, name=values)``, which routes dedicated-
+    # field columns to their field and validates names (did-you-mean).
+    columns: tuple = ()
     # Events retired per lax.scan chunk inside the outer while_loop
     # (amortizes the loop-condition check; results are chunk-invariant —
     # the live-guard in _step retires partial tails as no-ops).  128
@@ -261,9 +302,11 @@ class SimTables(NamedTuple):
     nc_dur: jnp.ndarray    # i32[N,S] non-CS ticks per (core, segment)
     inter: jnp.ndarray     # i32[N] inter-epoch ticks per core
     seg_lock: jnp.ndarray  # i32[S] lock id per segment
-    slo_scale: jnp.ndarray  # f32[N] per-core SLO multiplier (multi-class)
-    wl_service: jnp.ndarray  # i32[N] per-core SERVICES id (-1 = inherit)
-    ft_mask: jnp.ndarray   # f32[N] per-core fault eligibility (0/1)
+    # Registered per-core columns (repro.core.columns): every declared
+    # ColumnSpec — the tenancy/fault/energy built-ins (slo_scale,
+    # wl_service, ft_mask, dvfs, p_*) plus policy-owned ones — as
+    # name -> [N] arrays.  Each is a sweepable table axis.
+    col: dict
 
 
 class SimParams(NamedTuple):
@@ -330,6 +373,9 @@ class SimState(NamedTuple):
     cs_cnt: jnp.ndarray       # i32[N]
     events: jnp.ndarray       # i32
     arr_t: jnp.ndarray        # i32[N] next open-loop arrival (wl_open)
+    energy: jnp.ndarray       # f32[N] accumulated energy (watt-ticks;
+    #                           stays all-zero unless a power table is
+    #                           set — the static _energy_on gate)
     # Policy-owned state slots (LockPolicy.init_state; {} for policies
     # that need none — e.g. shfl's per-lock shuffle counter).
     pol: dict
@@ -363,39 +409,81 @@ def _canon(cfg: SimConfig) -> SimConfig:
         straggle_rate=1.0 if cfg.straggle_rate > 0.0 else 0.0,
         straggle_scale=1.0,
         slo_scale=(), wl_service_per_core=(), fault_mask=(),
+        dvfs=(), columns=(),
+        # Energy: one static on/off bit (whether the integration ops
+        # exist in the HLO at all); the watt values ride in SimTables.
+        p_cs=(0.0,) if _energy_on(cfg) else (),
+        p_spin=(), p_park=(), p_idle=(),
         policy_kw=())
 
 
+def _energy_on(cfg: SimConfig) -> bool:
+    """The single static energy gate: is any per-core power table set?
+    (Zero-valued tables still flip it on — they compile the integration
+    ops but accumulate exact zeros, which is what the zero-power
+    bit-purity probe asserts.)"""
+    return bool(cfg.p_cs or cfg.p_spin or cfg.p_park or cfg.p_idle)
+
+
 def build_tables(cfg: SimConfig) -> SimTables:
-    """Precompute the per-(core, segment) duration tables once per run."""
+    """Precompute the per-(core, segment) duration tables once per run.
+
+    Every registered :class:`~repro.core.columns.ColumnSpec` is
+    materialized into ``SimTables.col`` — encoded, then padded with its
+    *neutral default* (a short f32[k] table would be index-*clamped*
+    inside jit, silently giving high cores the last entry's value).
+    The ``dvfs`` column additionally divides the segment durations
+    host-side (frequency scaling; f=1.0 is bitwise exact, so default-
+    DVFS tables are bit-identical to pre-DVFS ones).  The inter-epoch
+    gap is application pacing, not compute — it stays
+    frequency-independent so DVFS sweeps change service capacity, not
+    offered load."""
     n = cfg.n_cores
     s = len(cfg.seg_cs_us)
+    f = colreg.COLUMNS["dvfs"].host_values(cfg, n)
+    col = {spec.name: jnp.asarray(
+        spec.host_values(cfg, n),
+        jnp.int32 if spec.dtype == "i32" else jnp.float32)
+        for spec in colreg.COLUMNS.values()}
     return SimTables(
         big=jnp.asarray(cfg.big[:n], jnp.int32),
         cs_dur=jnp.asarray(
-            [[_ticks(cfg.seg_cs_us[j] * cfg.speed_cs[c]) for j in range(s)]
-             for c in range(n)], jnp.int32),
+            [[_ticks(cfg.seg_cs_us[j] * cfg.speed_cs[c] / f[c])
+              for j in range(s)] for c in range(n)], jnp.int32),
         nc_dur=jnp.asarray(
-            [[_ticks(cfg.seg_noncrit_us[j] * cfg.speed_nc[c])
+            [[_ticks(cfg.seg_noncrit_us[j] * cfg.speed_nc[c] / f[c])
               for j in range(s)] for c in range(n)], jnp.int32),
         inter=jnp.asarray(
             [_ticks(cfg.inter_epoch_us * cfg.speed_nc[c]) for c in range(n)],
             jnp.int32),
         seg_lock=jnp.asarray(cfg.seg_lock, jnp.int32),
-        # Pad a short table with 1.0 (neutral): a short f32[k] table
-        # would be index-*clamped* inside jit, silently giving high
-        # cores the last class's SLO scale.
-        slo_scale=jnp.asarray(
-            (tuple(cfg.slo_scale) + (1.0,) * n)[:n], jnp.float32),
-        # -1 = inherit the run-wide SimParams.wl_service id (pad with
-        # inherit for the same clamping reason as slo_scale).
-        wl_service=jnp.asarray(
-            ([-1 if not d else wlg.SERVICES[d]
-              for d in cfg.wl_service_per_core] + [-1] * n)[:n],
-            jnp.int32),
-        # Pad with 1.0 (eligible): faults default to hitting every core.
-        ft_mask=jnp.asarray(
-            (tuple(cfg.fault_mask) + (1.0,) * n)[:n], jnp.float32))
+        col=col)
+
+
+def table_columns(cfg: SimConfig) -> dict:
+    """Host-side view of every registered column exactly as
+    ``build_tables`` materializes it (encoded + padded), keyed by
+    column name — the host-reconstruction counterpart of
+    ``SimTables.col`` (pairs with ``generators.epoch_scale_tables``)."""
+    return {spec.name: spec.host_values(cfg, cfg.n_cores)
+            for spec in colreg.COLUMNS.values()}
+
+
+def with_columns(cfg: SimConfig, **cols) -> SimConfig:
+    """Set registered per-core columns on a config by *column name*:
+    dedicated-field columns (``slo_scale``, ``fault_mask``, ``dvfs``,
+    the power tables ...) route to their SimConfig field; plugin-owned
+    columns land in the generic ``cfg.columns`` tuple.  Unknown names
+    raise with a did-you-mean."""
+    for name, vals in cols.items():
+        spec = colreg.lookup(name)
+        if spec.field:
+            cfg = dataclasses.replace(cfg, **{spec.field: tuple(vals)})
+        else:
+            d = dict(cfg.columns)
+            d[name] = tuple(vals)
+            cfg = dataclasses.replace(cfg, columns=tuple(sorted(d.items())))
+    return cfg
 
 
 def build_params(cfg: SimConfig, slo_us, seed=0, n_active=None) -> SimParams:
@@ -514,6 +602,7 @@ def _init_state(cfg: SimConfig, tb: SimTables, pm: SimParams,
         cs_cnt=jnp.zeros(n, jnp.int32),
         events=jnp.int32(0),
         arr_t=arr0,
+        energy=jnp.zeros(n, jnp.float32),
         pol=policies.get(cfg.policy).init_state(cfg, tb, pm),
     )
 
@@ -547,8 +636,26 @@ def init_state(cfg: SimConfig, seed: int = 0, windows0=None) -> SimState:
 def _svc_dist(tb: SimTables, pm: SimParams, c=None):
     """Effective SERVICES id: the per-core table override (multi-class
     tenants), falling back to the run-wide traced id."""
-    per_core = tb.wl_service if c is None else tb.wl_service[c]
+    per_core = tb.col["wl_service"] if c is None else tb.col["wl_service"][c]
     return jnp.where(per_core >= 0, per_core, pm.wl_service)
+
+
+def _power_draw(tb: SimTables, pm: SimParams, st: SimState):
+    """Per-core instantaneous watts from phase + DVFS state: compute
+    (NONCRIT/HOLDER) and busy-wait (SPIN/STANDBY) draws scale with
+    dvfs^3 (P_dyn ~ f^3, the DVFS cube law); parked (QUEUED) and idle
+    (ARRIVAL wait) are frequency-independent floor draws.  Inactive
+    padded cores draw idle power."""
+    ph = st.phase
+    f3 = tb.col["dvfs"] ** 3
+    p = jnp.where(
+        jnp.logical_or(ph == NONCRIT, ph == HOLDER), tb.col["p_cs"] * f3,
+        jnp.where(jnp.logical_or(ph == SPIN, ph == STANDBY),
+                  tb.col["p_spin"] * f3,
+                  jnp.where(ph == QUEUED, tb.col["p_park"],
+                            tb.col["p_idle"])))
+    active = jnp.arange(ph.shape[0], dtype=jnp.int32) < pm.n_active
+    return jnp.where(active, p, tb.col["p_idle"])
 
 
 def _handle_acquire(st: SimState, cfg: SimConfig, tb: SimTables,
@@ -563,7 +670,7 @@ def _handle_acquire(st: SimState, cfg: SimConfig, tb: SimTables,
         # multiplied by the per-core eligibility mask so an ineligible
         # core (or rate 0) is bit-identical to fault-free.
         off = flt.churn_off(pm.seed, c, t,
-                            pm.churn_rate * tb.ft_mask[c],
+                            pm.churn_rate * tb.col["ft_mask"][c],
                             pm.churn_period)
         bounce = jnp.logical_and(cond, off)
         st = st._replace(t_ready=st.t_ready.at[c].set(
@@ -748,6 +855,16 @@ def _step(cfg: SimConfig, tb: SimTables, pm: SimParams, horizon,
     c = jnp.argmin(st.t_ready).astype(jnp.int32)
     t = st.t_ready[c]                       # == min(t_ready)
     live = jnp.logical_and(t < horizon, st.events < cfg.max_events)
+    if _energy_on(cfg):
+        # Energy integrates exactly over global time: this event
+        # advances the clock st.t -> t, and every core spends that dt
+        # in its *current* phase.  The update is passive (reads state,
+        # perturbs nothing downstream) and statically gated, so
+        # power-free runs compile no energy ops and zero-power runs
+        # accumulate exact zeros.
+        dt = jnp.where(live, (t - st.t).astype(jnp.float32),
+                       jnp.float32(0.0))
+        st = st._replace(energy=st.energy + dt * _power_draw(tb, pm, st))
     st = st._replace(t=jnp.where(live, t, st.t),
                      events=st.events + jnp.where(live, 1, 0))
     table = _dispatch_table(cfg)
@@ -932,18 +1049,47 @@ _WL_AXES = ("arrival_rate", "cv", "mix", "mix_scale", "burstiness",
 # on in the template config (the on/off bit is part of the jit key).
 _GATE_AXES = ("long_epoch_prob", "wakeup_us", "preempt_rate",
               "churn_rate", "straggle_rate")
-# axis name -> SimConfig field rebuilt through build_tables per cell
-_TABLE_AXES = ("seg_noncrit_us", "seg_cs_us", "seg_lock", "inter_epoch_us",
-               "big", "speed_cs", "speed_nc", "slo_scale",
-               "wl_service_per_core", "fault_mask")
-SWEEPABLE = tuple(_PARAM_AXES) + _TABLE_AXES + ("window0_us",)
+# Program axes: SimConfig fields rebuilt through build_tables per cell.
+_PROGRAM_AXES = ("seg_noncrit_us", "seg_cs_us", "seg_lock",
+                 "inter_epoch_us", "big", "speed_cs", "speed_nc")
+
+
+def table_axes() -> tuple:
+    """Axes that rebuild ``SimTables`` per cell (still one executable):
+    the program axes plus every *registered* sweepable column's axis
+    name (repro.core.columns) — recomputed so late-registered plugin
+    columns sweep without touching the engine."""
+    return _PROGRAM_AXES + tuple(colreg.axis_to_spec())
+
+
+def _sweepable() -> tuple:
+    return tuple(_PARAM_AXES) + table_axes() + ("window0_us",)
+
+
+# Import-time snapshot for docs/introspection; sweep() itself recomputes.
+SWEEPABLE = _sweepable()
 
 
 def sweepable_axes(cfg: SimConfig) -> tuple:
     """All sweep axes valid for ``cfg`` — the engine's plus the
     registered policy's declared ``sweep_axes``."""
-    return SWEEPABLE + tuple(
-        a for a in policies.get(cfg.policy).sweep_axes if a not in SWEEPABLE)
+    base = _sweepable()
+    return base + tuple(
+        a for a in policies.get(cfg.policy).sweep_axes if a not in base)
+
+
+def _cell_tables_cfg(cfg: SimConfig, cell: dict, table_keys) -> SimConfig:
+    """Apply a cell's table-axis values onto the template config:
+    program axes replace their field directly; column axes route
+    through ``with_columns`` (field-backed or plugin-owned alike)."""
+    by_axis = colreg.axis_to_spec()
+    for k in table_keys:
+        if k in _PROGRAM_AXES:
+            cfg = dataclasses.replace(cfg, **{k: cell[k]})
+        else:
+            v = cell[k]
+            cfg = with_columns(cfg, **{by_axis[k].name: tuple(v)})
+    return cfg
 
 
 def _cell_params(cfg: SimConfig, cell: dict, slo_us, seed) -> SimParams:
@@ -1011,8 +1157,13 @@ def _sweep_resumable(ccfg: SimConfig, tb: SimTables, pm: SimParams, w0,
     h = hashlib.sha256()
     for x in jax.tree.leaves((tb, pm, w0)):
         h.update(np.ascontiguousarray(np.asarray(x)).tobytes())
+    # The digest already covers every traced value — SimTables.col
+    # leaves (column drift) and SimParams.pol leaves (policy_kw drift)
+    # included; the explicit name lists catch key-set changes whose
+    # values happen to collide.
     fp = {"canon": repr(ccfg), "n_cells": n_cells, "chunk": chunk,
           "digest": h.hexdigest(),
+          "columns": sorted(tb.col), "pol": sorted(pm.pol),
           "leaves": [[list(np.shape(x)), jnp.dtype(x.dtype).name]
                      for x in jax.tree.leaves((tb, pm))]}
     d = Path(resume_dir)
@@ -1095,6 +1246,16 @@ def sweep(cfg: SimConfig, axes: dict, *, slo_us=1e9, seed=0,
             cfg = dataclasses.replace(cfg, **{gate: max(axes[gate])})
     if not cfg.wl and any(a in axes for a in _WL_AXES):
         cfg = dataclasses.replace(cfg, wl=True)
+    # Sweeping a power column with any nonzero watts must flip the
+    # static energy gate on: the swept values ride in the per-cell
+    # tables; the template only needs a non-empty power field so _canon
+    # keeps the integration ops ((0.0,) pads to the all-zero default —
+    # bit-identical tables for cells that don't sweep it).
+    if not _energy_on(cfg) and any(
+            a in axes and any(any(float(x) != 0.0 for x in v)
+                              for v in axes[a])
+            for a in _energy.POWER_COLUMNS):
+        cfg = dataclasses.replace(cfg, p_idle=(0.0,))
     names = list(axes)
     vals = [list(axes[k]) for k in names]
     if product:
@@ -1110,11 +1271,12 @@ def sweep(cfg: SimConfig, axes: dict, *, slo_us=1e9, seed=0,
     if "n_cores" in axes and max(axes["n_cores"]) > cfg.n_cores:
         raise ValueError("n_cores axis exceeds the padded cfg.n_cores")
 
-    # Per-cell tables (rebuilt only when a program axis is swept).
-    table_keys = [k for k in names if k in _TABLE_AXES]
+    # Per-cell tables (rebuilt only when a program/column axis is swept).
+    tbl_axes = table_axes()
+    table_keys = [k for k in names if k in tbl_axes]
     if table_keys:
-        tbs = [build_tables(dataclasses.replace(
-            cfg, **{k: cell[k] for k in table_keys})) for cell in cells]
+        tbs = [build_tables(_cell_tables_cfg(cfg, cell, table_keys))
+               for cell in cells]
         tb = jax.tree.map(lambda *xs: jnp.stack(xs), *tbs)
     else:
         tb1 = build_tables(cfg)
@@ -1158,7 +1320,7 @@ def sweep(cfg: SimConfig, axes: dict, *, slo_us=1e9, seed=0,
     if pad:
         st = jax.tree.map(lambda x: x[:n_cells], st)
     grid = {k: np.asarray([cell[k] for cell in cells], dtype=object)
-            if k in _TABLE_AXES else np.asarray([cell[k] for cell in cells])
+            if k in tbl_axes else np.asarray([cell[k] for cell in cells])
             for k in names}
     return st, grid
 
@@ -1241,6 +1403,20 @@ def summarize(cfg: SimConfig, st: SimState, warmup: int = 32,
         out[f"ep_p50_{name}_us"] = float(np.percentile(ep, 50)) if ep.size else float("nan")
         out[f"cs_p99_{name}_us"] = float(np.percentile(cs, 99)) if cs.size else float("nan")
     out["final_window_us"] = (np.asarray(st.window)[:n] / US).tolist()
+    # Energy (repro.core.energy): the accumulator is in watt-ticks and
+    # 1 tick = 10 ns, so 1 watt-tick = 10 nJ.  The derived efficiency
+    # metrics only appear when some energy was actually modeled.
+    e_j = np.asarray(st.energy)[:n].astype(float) * 1e-8
+    out["energy_per_core_j"] = e_j.tolist()
+    out["energy_j"] = float(e_j.sum())
+    if out["energy_j"] > 0.0:
+        out["power_w"] = out["energy_j"] / sim_s
+        out["tput_per_watt"] = (out["throughput_cs_per_s"]
+                                / out["power_w"])
+        p50 = out["ep_p50_all_us"]
+        # EDP = energy x delay (J*s); delay = the median epoch latency.
+        out["edp"] = out["energy_j"] * p50 * 1e-6 if np.isfinite(p50) \
+            else float("nan")
     if slo_us is not None:
         scl = np.asarray((tuple(cfg.slo_scale) + (1.0,) * n)[:n], float)
         good = tot = 0

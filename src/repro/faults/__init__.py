@@ -7,9 +7,18 @@ fault knobs are ``SimConfig`` fields, swept as batch axes).  Host side:
 :mod:`repro.faults.host` drive the serving/dispatch sims.
 """
 
+from repro.core.columns import ColumnSpec, register_column
 from repro.faults.host import outage_mask, preempt_stalls, spike_hits
 from repro.faults.model import (FaultSpec, churn_off, churn_rejoin,
                                 preempt_extra, straggle_extra)
+
+# Per-core fault eligibility rides as an owned SimTables column
+# (repro.core.columns): 1.0 = faults may hit this core, padded with
+# eligible.  Sweepable table axis (name kept: ``fault_mask``).
+register_column(ColumnSpec(
+    name="ft_mask", dtype="f32", default=1.0, field="fault_mask",
+    owner="faults",
+    doc="per-core fault eligibility (0/1); multiplies the fault rates"))
 
 __all__ = [
     "FaultSpec",

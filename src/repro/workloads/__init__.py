@@ -23,11 +23,27 @@ arrivals + services), ``benchmarks/paper_figs.py`` (the load-latency
 figure).  See docs/workloads.md.
 """
 
+from repro.core.columns import ColumnSpec, register_column
 from repro.workloads.generators import (ARRIVALS, SERVICES, ArrivalSpec,
                                         ServiceSpec, arrival_times,
                                         service_times)
 from repro.workloads.clients import ClientClass, WorkloadMix
 from repro.workloads.traces import Trace
+
+# The multi-class tenancy tables ride as owned SimTables columns
+# (repro.core.columns): the per-core SLO multiplier and the per-core
+# service-distribution id (-1 = inherit the run-wide traced id).  Both
+# keep their pre-refactor sweep-axis names via ``field``.
+register_column(ColumnSpec(
+    name="slo_scale", dtype="f32", default=1.0, field="slo_scale",
+    owner="workloads",
+    doc="per-core SLO multiplier (multi-class tenancy)"))
+register_column(ColumnSpec(
+    name="wl_service", dtype="i32", default=-1,
+    field="wl_service_per_core", numeric=False,
+    encode=lambda d: -1 if not d else SERVICES[d],
+    owner="workloads",
+    doc="per-core SERVICES id override (-1 = inherit wl_service)"))
 
 __all__ = [
     "ARRIVALS", "SERVICES", "ArrivalSpec", "ServiceSpec",

@@ -123,6 +123,9 @@ def amp_config(cfg, mix: WorkloadMix, base_slo: float):
     / ``mix_scale``) stay run-wide traced knobs.  Returns
     ``(cfg, class_of_core)``.
     """
+    # Lazy import: simlock imports this package (generators) at load
+    # time; by the time a SimConfig reaches amp_config it is loaded.
+    from repro.core import simlock as sl
     assign = assign_cores(mix, cfg.big[:cfg.n_cores])
     scale = tuple(
         float(mix.classes[k].slo / base_slo) if
@@ -133,8 +136,8 @@ def amp_config(cfg, mix: WorkloadMix, base_slo: float):
                 if mix.classes[k].service != default else None
                 for k in assign)
     if any(svc):
-        cfg = dataclasses.replace(cfg, wl_service_per_core=svc)
-    return dataclasses.replace(cfg, slo_scale=scale), assign
+        cfg = sl.with_columns(cfg, wl_service=svc)
+    return sl.with_columns(cfg, slo_scale=scale), assign
 
 
 def multiclass_workload(engine, mix: WorkloadMix, *, rate_rps: float,

@@ -1,0 +1,131 @@
+"""Energy/DVFS layer tests (repro.core.energy, docs/energy.md).
+
+The contract: with no power tables set the energy accumulator is
+statically compiled out and every SimState/summary leaf is bit-identical
+to a pre-energy run; with tables set, ``SimState.energy`` is exactly the
+time integral of the phase power (telescoping sum over event steps), so
+a uniform 1 W draw conserves energy_j == active-cores x sim-seconds.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import energy
+from repro.core import simlock as sl
+from repro.core.policies import REGISTRY
+
+
+def _cfg(policy="fifo", **kw):
+    kw.setdefault("sim_time_us", 4_000.0)
+    return sl.SimConfig(policy=policy, **kw)
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+ALL_POLICIES = tuple(REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# Purity: the energy layer off (or zero) must not perturb anything
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_zero_power_bit_identical(policy):
+    """Gate-on with all-zero power tables == gate-off, every leaf
+    (0 + 0*dt accumulates exact f32 zeros)."""
+    base = _cfg(policy, straggle_rate=0.1,
+                fault_mask=(1.0, 1.0, 0.0, 1.0) * 2)
+    zero = sl.with_columns(base, p_cs=(0.0,) * 8, p_spin=(0.0,) * 8,
+                           p_park=(0.0,) * 8, p_idle=(0.0,) * 8)
+    assert sl._canon(base) != sl._canon(zero)   # gate IS in the jit key
+    _leaves_equal(sl.run(base, 200.0, seed=2), sl.run(zero, 200.0, seed=2))
+
+
+def test_default_dvfs_bit_identical():
+    """dvfs=1.0 everywhere is bitwise x/1.0 == x on the host-built
+    durations — identical tables, identical run."""
+    base = _cfg("shfl")
+    one = sl.with_columns(base, dvfs=(1.0,) * 8)
+    _leaves_equal(sl.build_tables(base), sl.build_tables(one))
+    _leaves_equal(sl.run(base, 200.0), sl.run(one, 200.0))
+
+
+def test_summarize_without_power_has_zero_energy():
+    cfg = _cfg()
+    s = sl.summarize(cfg, jax.tree.map(np.asarray, sl.run(cfg, 200.0)))
+    assert s["energy_j"] == 0.0
+    assert "tput_per_watt" not in s and "edp" not in s
+
+
+# ---------------------------------------------------------------------------
+# Conservation + the power model
+# ---------------------------------------------------------------------------
+
+def test_energy_conservation_uniform_power():
+    """1 W in every phase, DVFS off: energy == integral of 1 W over the
+    horizon for each active core (Sum dt telescopes to t_end)."""
+    cfg = sl.with_columns(_cfg("fifo", sim_time_us=10_000.0),
+                          p_cs=(1.0,) * 8, p_spin=(1.0,) * 8,
+                          p_park=(1.0,) * 8, p_idle=(1.0,) * 8)
+    st = sl.run(cfg, 1e9)
+    s = sl.summarize(cfg, jax.tree.map(np.asarray, st))
+    want = cfg.n_cores * cfg.sim_time_us * 1e-6        # n x seconds
+    np.testing.assert_allclose(s["energy_j"], want, rtol=0.02)
+    assert s["power_w"] == pytest.approx(cfg.n_cores, rel=0.02)
+
+
+def test_big_cores_draw_more():
+    """With the calibrated big.LITTLE tables, big cores burn more J and
+    the summary surfaces tput_per_watt + edp."""
+    cfg = sl.with_columns(_cfg("fifo", sim_time_us=10_000.0),
+                          **energy.amp_power(sl.SimConfig().big))
+    s = sl.summarize(cfg, jax.tree.map(np.asarray, sl.run(cfg, 1e9)))
+    e = np.asarray(s["energy_per_core_j"])
+    assert e[:4].min() > e[4:].max()                   # big >> little
+    assert s["energy_j"] > 0 and s["tput_per_watt"] > 0
+    assert np.isfinite(s["edp"]) and s["edp"] > 0
+
+
+def test_dvfs_speeds_up_and_cubes_power():
+    """Doubling every core's clock raises throughput (shorter CS) and
+    raises energy superlinearly (f^3 spin/active draw)."""
+    slow = sl.with_columns(_cfg("fifo", sim_time_us=10_000.0),
+                           **energy.amp_power(sl.SimConfig().big))
+    fast = sl.with_columns(slow, dvfs=(2.0,) * 8)
+    a = sl.summarize(slow, jax.tree.map(np.asarray, sl.run(slow, 1e9)))
+    b = sl.summarize(fast, jax.tree.map(np.asarray, sl.run(fast, 1e9)))
+    assert b["throughput_cs_per_s"] > a["throughput_cs_per_s"]
+    assert b["energy_j"] > 2.0 * a["energy_j"]
+
+
+def test_energy_sweeps_as_table_axis():
+    """Power tables batch as table sweep axes — the whole big-vs-little
+    power comparison is one executable, each cell == its single run."""
+    cfg = _cfg("shfl", sim_time_us=3_000.0)
+    tabs = [(0.0,) * 8, (1.0,) * 8, tuple(energy.amp_power(
+        sl.SimConfig().big)["p_cs"])]
+    n0 = sl.n_batch_executables()
+    st, grid = sl.sweep(cfg, {"p_cs": tabs}, slo_us=200.0)
+    assert sl.n_batch_executables() - n0 <= 1
+    for i, tab in enumerate(grid["p_cs"]):
+        single = sl.run(sl.with_columns(cfg, p_cs=tuple(tab)), 200.0)
+        cell = jax.tree.map(lambda x: np.asarray(x)[i], st)
+        np.testing.assert_allclose(
+            sl.summarize(cfg, cell)["energy_j"],
+            sl.summarize(cfg, jax.tree.map(np.asarray, single))["energy_j"],
+            rtol=1e-6)
+
+
+def test_dvfs_validation_rejects_nonpositive():
+    with pytest.raises(ValueError, match="> 0"):
+        sl.with_columns(_cfg(), dvfs=(0.0,) * 8)
+    with pytest.raises(ValueError, match="NaN"):
+        dataclasses.replace(_cfg(), p_cs=(-1.0,) * 8)

@@ -14,6 +14,7 @@ import jax
 import numpy as np
 import pytest
 
+from repro.core import columns as colreg
 from repro.core import simlock as sl
 from repro.core.policies import REGISTRY, get, policy_ids
 
@@ -68,7 +69,11 @@ def test_declared_slots_exist(policy):
         assert (name in pm.pol if slot.startswith("pol.")
                 else hasattr(pm, slot)), slot
     for slot in pol.table_slots:
-        assert hasattr(tb, slot), slot
+        # "col.<name>" slots resolve against the registered-column dict.
+        if slot.startswith("col."):
+            assert slot.split("col.", 1)[1] in tb.col, slot
+        else:
+            assert hasattr(tb, slot), slot
     for slot in pol.state_slots:
         assert hasattr(st, slot) or slot in st.pol, slot
     for slot in pol.sweep_axes.values():
@@ -381,3 +386,100 @@ def test_open_loop_arrivals_policy_independent():
                        np.asarray(st.arr_t).copy())
     np.testing.assert_array_equal(out["fifo"][0], out["shfl"][0])
     np.testing.assert_array_equal(out["fifo"][1], out["shfl"][1])
+
+
+# ---------------------------------------------------------------------------
+# Policy-owned SimTables columns (repro.core.columns): conformance for
+# the declared-column mechanism every feature layer now rides on.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_own_columns_registered_and_sweepable(policy):
+    """Every declared own_column (and every "col." table slot) must be
+    a registered ColumnSpec, and sweepable specs must surface as sweep
+    axes for the policy's configs."""
+    pol = get(policy)
+    axes = sl.sweepable_axes(_cfg(policy, sim_time_us=100.0))
+    for name in pol.own_columns:
+        spec = colreg.COLUMNS[name]
+        if spec.sweepable:
+            assert spec.axis in axes, name
+    for slot in pol.table_slots:
+        if slot.startswith("col."):
+            assert slot.split("col.", 1)[1] in colreg.COLUMNS, slot
+
+
+def test_owned_column_sweeps_in_one_executable():
+    """dvfs_race's own ``race_w`` column batches as a table sweep axis:
+    one executable for the whole curve, each cell == its dedicated
+    single run (set via with_columns)."""
+    cfg = _cfg("dvfs_race")
+    tables = [(1.0,) * 8, (1.0,) * 4 + (0.0,) * 4, (3.0,) + (1.0,) * 7]
+    n0 = sl.n_batch_executables()
+    st, grid = sl.sweep(cfg, {"race_w": tables}, slo_us=SLO_US)
+    assert sl.n_batch_executables() - n0 <= 1
+    for i, tab in enumerate(grid["race_w"]):
+        single = sl.run(sl.with_columns(cfg, race_w=tuple(tab)), SLO_US)
+        _close(sl.summarize(cfg, _cell(st, i)), sl.summarize(cfg, single))
+
+
+def test_owned_column_sharded_bit_parity():
+    from repro.launch.mesh import make_sweep_mesh
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >1 (virtual) device")
+    cfg = _cfg("dvfs_race", sim_time_us=3_000.0)
+    tables = [(1.0,) * 8, (2.0,) * 4 + (1.0,) * 4, (0.5,) * 8]
+    a, _ = sl.sweep(cfg, {"race_w": tables}, slo_us=SLO_US)
+    b, _ = sl.sweep(cfg, {"race_w": tables}, slo_us=SLO_US,
+                    mesh=make_sweep_mesh())
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_canon_wipes_columns_from_jit_key():
+    """Round-trip: two configs differing only in column values share one
+    canonical jit key (columns are traced, not static), canon is
+    idempotent, and the one static energy bit survives canon."""
+    base = _cfg("dvfs_race")
+    varied = sl.with_columns(base, race_w=(2.0,) * 8,
+                             slo_scale=(1.0, 4.0) * 4,
+                             dvfs=(1.5,) * 8)
+    assert sl._canon(varied) == sl._canon(base)
+    assert sl._canon(sl._canon(varied)) == sl._canon(varied)
+    assert sl._canon(varied).columns == ()
+    powered = sl.with_columns(base, p_cs=(1.0,) * 8)
+    assert sl._canon(powered) != sl._canon(base)
+    assert sl._canon(sl.with_columns(base, p_idle=(2.0,) * 8)) == \
+        sl._canon(powered)
+
+
+def test_unknown_column_did_you_mean():
+    with pytest.raises(ValueError, match="did you mean 'race_w'"):
+        sl.with_columns(_cfg("dvfs_race", sim_time_us=100.0),
+                        race_weight=((1.0,) * 8))
+    with pytest.raises(ValueError, match="unknown SimTables column"):
+        sl.SimConfig(policy="fifo", columns=(("no_such_col", (1.0,)),))
+    # dedicated-field columns must ride their field, not the generic
+    # tuple (two sources of truth would desync).
+    with pytest.raises(ValueError, match="dedicated SimConfig field"):
+        sl.SimConfig(policy="fifo", columns=(("slo_scale", (1.0,)),))
+
+
+def test_dvfs_race_prefers_fast_cores():
+    """Race-to-idle granting must beat FIFO throughput on the default
+    4+4 AMP (big-forward, like shfl) while the race_bound cap keeps
+    every little core live."""
+    race = _cfg("dvfs_race", sim_time_us=10_000.0)
+    fifo = _cfg("fifo", sim_time_us=10_000.0)
+    a = sl.summarize(race, sl.run(race, 1e9))
+    b = sl.summarize(fifo, sl.run(fifo, 1e9))
+    assert a["throughput_cs_per_s"] > b["throughput_cs_per_s"]
+
+
+def test_race_w_zero_still_live():
+    """race_w=0 bans shuffling entirely — the forced-head fallback must
+    still grant every waiter (liveness under a degenerate column)."""
+    cfg = sl.with_columns(_cfg("dvfs_race", sim_time_us=20_000.0),
+                          race_w=(0.0,) * 8)
+    st = sl.run(cfg, SLO_US)
+    assert (np.asarray(st.ep_cnt) > 0).all()

@@ -163,6 +163,39 @@ def test_sweep_resume_rejects_mismatched_grid(tmp_path):
         sl.sweep(cfg, {"slo_us": [30.0, 50.0]}, seed=1, resume_dir=d)
 
 
+def test_sweep_resume_rejects_policy_kw_drift(tmp_path):
+    """policy_kw values ride traced in SimParams.pol — the resume
+    fingerprint digests them, so editing a knob between runs must not
+    splice old chunks into the new sweep."""
+    d = tmp_path / "resume"
+    axes = {"slo_us": [30.0, 50.0]}
+    cfg = sl.SimConfig(policy="shfl", sim_time_us=1_000.0,
+                       policy_kw=(("shfl_bound", 4),))
+    sl.sweep(cfg, axes, resume_dir=d)
+    drift = dataclasses.replace(cfg, policy_kw=(("shfl_bound", 16),))
+    with pytest.raises(ValueError, match="different sweep"):
+        sl.sweep(drift, axes, resume_dir=d)
+    # unchanged knobs still resume cleanly
+    sl.sweep(cfg, axes, resume_dir=d)
+
+
+def test_sweep_resume_rejects_column_drift(tmp_path):
+    """Registered-column tables (owned or built-in) are digested too:
+    a changed per-core table invalidates the directory."""
+    d = tmp_path / "resume"
+    axes = {"slo_us": [30.0, 50.0]}
+    cfg = sl.with_columns(
+        sl.SimConfig(policy="dvfs_race", sim_time_us=1_000.0),
+        race_w=(1.0,) * 4, dvfs=(1.0,) * 4)
+    sl.sweep(cfg, axes, resume_dir=d)
+    for drift in (sl.with_columns(cfg, race_w=(2.0,) * 4),
+                  sl.with_columns(cfg, dvfs=(1.5,) * 4),
+                  sl.with_columns(cfg, slo_scale=(4.0,) * 4)):
+        with pytest.raises(ValueError, match="different sweep"):
+            sl.sweep(drift, axes, resume_dir=d)
+    sl.sweep(cfg, axes, resume_dir=d)
+
+
 def test_sweep_resume_incompatible_with_mesh(tmp_path):
     from repro.launch.mesh import make_sweep_mesh
     if len(jax.devices()) < 2:

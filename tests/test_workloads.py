@@ -302,7 +302,7 @@ def test_amp_config_slo_scale_rides_in_tables():
                              base_slo=50.0)
     assert cfg.slo_scale == (1.0,) * 4 + (10.0,) * 4
     tb = sl.build_tables(cfg)
-    np.testing.assert_array_equal(np.asarray(tb.slo_scale),
+    np.testing.assert_array_equal(np.asarray(tb.col["slo_scale"]),
                                   np.asarray(cfg.slo_scale, np.float32))
     st = sl.run(cfg, 50.0, seed=0)          # base_slo as the run SLO
     assert int(st.events) > 0
@@ -435,5 +435,5 @@ def test_amp_config_installs_per_core_service():
     assert cfg.wl_service_per_core == (None,) * 4 + ("bimodal",) * 4
     tb = sl.build_tables(cfg)
     np.testing.assert_array_equal(
-        np.asarray(tb.wl_service),
+        np.asarray(tb.col["wl_service"]),
         [-1] * 4 + [wlg.SERVICES["bimodal"]] * 4)
