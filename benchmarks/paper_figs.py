@@ -532,6 +532,41 @@ def bench6_blocking():
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Key-sharded datastore: hot-key contention collapse per dispatch policy
+# + throughput vs Zipf exponent (docs/workloads.md §Key-sharded traffic).
+# One ZIPPED sweep per policy — the theta column (5 exponents at 16
+# locks) and the lock-count column (1..8 locks at YCSB theta 0.99) ride
+# in the same batched call, so the whole figure is ONE executable per
+# policy.  Plain fifo under the keyed config IS the CRCW baseline (any
+# core may access any bucket, strict arrival order) — labeled ``crcw``.
+# ---------------------------------------------------------------------------
+
+KEYSHARD_THETAS = (0.0, 0.5, 0.9, 0.99, 1.2)
+KEYSHARD_LOCKS = (1, 2, 4, 8)
+KEYSHARD_POLICIES = (("fifo", "crcw"), ("ks_erew", "erew"),
+                     ("ks_crew", "crew"), ("ks_jbsq", "jbsq"))
+
+
+def keyshard(n_keys=4096, n_locks=16):
+    axes = {
+        "zipf_theta": list(KEYSHARD_THETAS) + [0.99] * len(KEYSHARD_LOCKS),
+        "n_locks": [n_locks] * len(KEYSHARD_THETAS) + list(KEYSHARD_LOCKS),
+    }
+    rows = []
+    for pol, label in KEYSHARD_POLICIES:
+        cfg = _cfg(pol, 8, n_locks=n_locks, n_keys=n_keys)
+        rows += _sweep_rows(
+            cfg, axes,
+            lambda c, p=label: (f"keyshard/{p}/th{c['zipf_theta']:g}"
+                                f"_l{int(c['n_locks'])}"),
+            product=False,
+            extra=lambda c, s, p=label: dict(
+                label=p, zipf_theta=float(c["zipf_theta"]),
+                n_locks=int(c["n_locks"]), n_keys=n_keys))
+    return rows
+
+
 ALL = {
     "fig1_collapse": fig1_collapse,
     "fig4_big_affinity": fig4_big_affinity,
@@ -547,4 +582,5 @@ ALL = {
     "openloop_loadlat": openloop_loadlat,
     "chaos_collapse": chaos_collapse,
     "energy_efficiency": energy_efficiency,
+    "keyshard": keyshard,
 }

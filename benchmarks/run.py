@@ -11,7 +11,9 @@ Sections:
                    runs one tiny cell), energy-layer probes (zero-power
                    purity, energy == integral-of-power conservation, the
                    energy_efficiency figure's one-executable-per-policy
-                   discipline) + a sharded-vs-unsharded sweep parity
+                   discipline), a keyshard probe (EREW beats the CRCW
+                   baseline under hot-key Zipf traffic, executable
+                   ceiling kept) + a sharded-vs-unsharded sweep parity
                    probe; nonzero exit on failure.
                    Opt-in (not part of the default all-sections run): it
                    virtualizes 8 host devices and pins XLA threading,
@@ -180,6 +182,17 @@ def _headline(name, rows) -> str:
                     f"{lit['fifo']['tput'] / full['fifo']['tput']:.2f}x;"
                     f"best_tputW={best['name']}"
                     f"@{best['tput_per_watt']:.0f}")
+        if name == "keyshard":
+            hot = {r["label"]: r for r in rows
+                   if r["n_locks"] == 1 and r["zipf_theta"] == 0.99}
+            th = {r["zipf_theta"]: r for r in rows
+                  if r["label"] == "crcw" and r["n_locks"] == 16}
+            return (f"hot1lock:erew_vs_crcw="
+                    f"{hot['erew']['tput'] / hot['crcw']['tput']:.2f}x,"
+                    f"jbsq_vs_crcw="
+                    f"{hot['jbsq']['tput'] / hot['crcw']['tput']:.2f}x;"
+                    f"crcw_th1.2_vs_uniform="
+                    f"{th[1.2]['tput'] / th[0.0]['tput']:.2f}x")
         if name == "straggler_training":
             by = {r["name"].split("/")[-1]: r for r in rows}
             return (f"asl_vs_sync={by['asl-staleness']['steps_per_s'] / by['sync']['steps_per_s']:.2f}x;"
@@ -324,6 +337,39 @@ def _energy_probe(results) -> bool:
     return ok
 
 
+def _keyshard_probe(results) -> bool:
+    """CI probe for the key-sharded datastore axis (docs/workloads.md
+    §Key-sharded traffic): under hot-key traffic (Zipf theta 1.2 over 4
+    bucket locks) the EREW owner-affinity policy must out-throughput the
+    CRCW baseline (plain fifo under the keyed config) — big cores retire
+    critical sections 3.75x faster, so pinning hot buckets to big-core
+    owners wins robustly (the comparison is bit-deterministic at a fixed
+    seed).  The probe may compile at most one new batched executable per
+    probed policy (the keyshard figure's own discipline)."""
+    from repro.core import simlock as sl
+
+    kw = dict(sim_time_us=4_000.0, n_locks=4, n_keys=1024,
+              zipf_theta=1.2)
+    n0 = sl.n_batch_executables()
+    tput = {}
+    for name in ("fifo", "ks_erew"):
+        cfg = sl.SimConfig(policy=name, **kw)
+        st, grid = sl.sweep(cfg, {"seed": [3]}, slo_us=60.0)
+        s = sl.sweep_summaries(cfg, st, grid)[0]
+        tput[name] = float(s["throughput_epochs_per_s"])
+    execs = sl.n_batch_executables() - n0
+    order_ok = tput["ks_erew"] > tput["fifo"]
+    exec_ok = execs <= 2
+    ok = bool(order_ok and exec_ok)
+    results["sim/keyshard"] = {
+        "tput_eps": tput, "new_executables": int(execs),
+        "hot_key_order_ok": bool(order_ok), "pass": ok}
+    _emit("sim/keyshard", 0.0,
+          f"hotkey:erew={tput['ks_erew']:.0f}_vs_crcw={tput['fifo']:.0f};"
+          f"execs={execs}(<=2);" + ("PASS" if ok else "FAIL"))
+    return ok
+
+
 def _sim_section(results, quick: bool) -> bool:
     """CI smoke gate for the simulator engine.  Runs the fig1 batched-vs-
     seed acceptance bench (the BENCH_simlock.json protocol, abridged) and
@@ -352,6 +398,7 @@ def _sim_section(results, quick: bool) -> bool:
 
     gate = _policy_matrix_probe(results) and gate
     gate = _energy_probe(results) and gate
+    gate = _keyshard_probe(results) and gate
 
     if len(jax.devices()) < 2:
         # The sharded half of the gate cannot run — that is itself a gate

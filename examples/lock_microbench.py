@@ -118,9 +118,32 @@ def openloop(fracs=(0.4, 0.9, 1.1), sim_time_us=20_000.0):
               f"{s['ep_p99_all_us']:>11.1f}u")
 
 
+def keyshard_matrix(locks=8, zipf=0.99, n_keys=1024,
+                    sim_time_us=20_000.0):
+    """Registry-driven key-sharded matrix (--locks / --zipf): every
+    registered policy on the same Zipf-keyed multi-lock workload
+    (docs/workloads.md §Key-sharded traffic).  The key-affinity
+    policies (ks_*) separate from the CRCW baseline (plain fifo) as the
+    traffic gets hotter (--zipf up) or the buckets fewer (--locks
+    down)."""
+    print(f"\n== Key-sharded matrix: {len(REGISTRY)} policies x "
+          f"{locks} locks, Zipf theta={zipf:g} over {n_keys} keys ==")
+    print(f"{'policy':>9} {'tput':>9} {'ep p99':>9} {'little p99':>11}")
+    for name in REGISTRY:
+        cfg = sl.SimConfig(policy=name, sim_time_us=sim_time_us,
+                           n_locks=locks, n_keys=n_keys,
+                           zipf_theta=zipf)
+        s = sl.summarize(cfg, sl.run(cfg, 100.0))
+        print(f"{name:>9} {s['throughput_cs_per_s']:>9.0f} "
+              f"{s['ep_p99_all_us']:>8.1f}u "
+              f"{s['ep_p99_little_us']:>10.1f}u")
+
+
 def main(ns=range(1, 9), slos=(20., 40., 60., 80., 100., 150., 200.),
-         sim_time_us=40_000.0, fracs=(0.4, 0.9, 3.0)):
+         sim_time_us=40_000.0, fracs=(0.4, 0.9, 3.0), locks=8,
+         zipf=0.99):
     policy_matrix(sim_time_us=sim_time_us / 2)
+    keyshard_matrix(locks, zipf, sim_time_us=sim_time_us / 2)
     figure1(ns, sim_time_us)
     figure8b(slos, sim_time_us)
     loadlat(fracs, sim_time_us=sim_time_us / 2)
@@ -128,4 +151,13 @@ def main(ns=range(1, 9), slos=(20., 40., 60., 80., 100., 150., 200.),
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="Paper-figure lock microbenchmarks")
+    ap.add_argument("--locks", type=int, default=8,
+                    help="bucket-lock count of the key-sharded matrix")
+    ap.add_argument("--zipf", type=float, default=0.99,
+                    help="Zipf exponent of the key-sharded matrix "
+                         "(0 = uniform, >1 = hot-key collapse)")
+    args = ap.parse_args()
+    main(locks=args.locks, zipf=args.zipf)

@@ -70,6 +70,7 @@ from repro.core.policies import libasl as _libasl      # noqa: E402,F401
 from repro.core.policies import edf as _edf            # noqa: E402,F401
 from repro.core.policies import shfl as _shfl          # noqa: E402,F401
 from repro.core.policies import dvfs_race as _dvfs_race  # noqa: E402,F401
+from repro.core.policies import keyshard as _keyshard  # noqa: E402,F401
 
 __all__ = ["LockPolicy", "REGISTRY", "register", "get", "policy_ids",
            "host_schedulers", "dispatch_names"]

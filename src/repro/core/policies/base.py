@@ -110,12 +110,32 @@ def weighted_pick(key, weights):
     return pick, total > 0.0
 
 
+def lock_of(st, cfg, tb, c):
+    """The lock core ``c`` currently contends.  Key-sharded mode
+    (``cfg.n_keys > 0`` — a static gate bit after canonicalization)
+    reads the per-epoch Zipf-drawn lock (``SimState.cur_lock``, set by
+    the engine's epoch-boundary key draws); otherwise the static
+    per-segment program lock — the pre-multi-lock expression, so
+    key-off runs compile identical HLO (bit-parity by construction)."""
+    if cfg.n_keys > 0:
+        return st.cur_lock[c]
+    return tb.seg_lock[st.seg[c]]
+
+
+def lock_vec(st, cfg, tb):
+    """Per-core effective lock ids as a vector (``i32[N]``) — the
+    vectorized :func:`lock_of`, used by waiter-mask scans."""
+    if cfg.n_keys > 0:
+        return st.cur_lock
+    return tb.seg_lock[st.seg]
+
+
 def grant(st, cfg, tb, pm, cond, c, t, wakeup=False):
     """Make core c (if cond) the holder of its lock; schedule its release.
     ``wakeup=True`` models a blocking lock's parked-waiter handoff latency
     (Bench-6): only queue-pop handoffs pay it, spinners/standbys do not."""
     c_safe = jnp.maximum(c, 0)
-    l = tb.seg_lock[st.seg[c_safe]]
+    l = lock_of(st, cfg, tb, c_safe)
     dur = tb.cs_dur[c_safe, st.seg[c_safe]]
     if cfg.wl:
         # Current-epoch service multiplier (drawn at the last epoch end);
@@ -162,19 +182,19 @@ def park(st, cond, c, new_phase):
         t_ready=st.t_ready.at[c].set(jnp.where(cond, INF, st.t_ready[c])))
 
 
-def waiting_mask(st, tb, l, phase=QUEUED):
-    """Cores parked in ``phase`` whose current segment contends lock l —
-    the scan-based waiter set used by queue-less policies (edf/shfl)."""
-    return jnp.logical_and(st.phase == phase, tb.seg_lock[st.seg] == l)
+def waiting_mask(st, cfg, tb, l, phase=QUEUED):
+    """Cores parked in ``phase`` currently contending lock l — the
+    scan-based waiter set used by queue-less policies (edf/shfl/ks_*)."""
+    return jnp.logical_and(st.phase == phase, lock_vec(st, cfg, tb) == l)
 
 
 def queueless_acquire(st, cfg, tb, pm, c, t, cond):
     """The queue-less acquire step (edf/shfl): grab when the lock is free
     and nobody waits, else park in QUEUED — the releaser's pick_next
     scans the waiting mask instead of popping a ring buffer."""
-    l = tb.seg_lock[st.seg[c]]
+    l = lock_of(st, cfg, tb, c)
     free = st.holder[l] == -1
-    no_wait = jnp.logical_not(jnp.any(waiting_mask(st, tb, l)))
+    no_wait = jnp.logical_not(jnp.any(waiting_mask(st, cfg, tb, l)))
     can_grab = jnp.logical_and(free, no_wait)
     grab = jnp.logical_and(can_grab, cond)
     wait = jnp.logical_and(jnp.logical_not(can_grab), cond)
@@ -195,6 +215,11 @@ class LockPolicy:
     #: True iff the policy parks cores in STANDBY (gates the standby
     #: handler's existence in the compiled step).
     uses_standby: bool = False
+    #: True iff the policy reads the per-epoch read/write uniform
+    #: (``SimState.cur_rw``, CREW-style policies).  Statically gates
+    #: whether the engine's key-sharded epoch draws include the
+    #: STREAM_RW uniform at all (key-off runs never draw it).
+    uses_rw: bool = False
     #: SimParams fields this policy reads (declarative; conformance-checked).
     param_slots: tuple = ()
     #: SimTables slots this policy reads: core fields by name, registered

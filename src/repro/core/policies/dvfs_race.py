@@ -68,7 +68,7 @@ class DvfsRacePolicy(LockPolicy):
         return queueless_acquire(st, cfg, tb, pm, c, t, cond)
 
     def pick_next(self, st, cfg, tb, pm, l, t, cond):
-        waiting = waiting_mask(st, tb, l)
+        waiting = waiting_mask(st, cfg, tb, l)
         speed = (tb.col["race_w"] * tb.col["dvfs"]
                  * (1.0 + tb.big.astype(jnp.float32)))
         # Masked score: non-waiters (and padded cores) at -1 can never

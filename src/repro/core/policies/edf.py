@@ -37,7 +37,7 @@ class EdfPolicy(LockPolicy):
         return queueless_acquire(st, cfg, tb, pm, c, t, cond)
 
     def pick_next(self, st, cfg, tb, pm, l, t, cond):
-        waiting = waiting_mask(st, tb, l)
+        waiting = waiting_mask(st, cfg, tb, l)
         # i32 tick arithmetic stays exact where f32 ulp (8192 ticks at
         # slo=1e9us) would quantize every deadline into an index-order
         # scramble; the clamp keeps the sum far from i32 overflow AND

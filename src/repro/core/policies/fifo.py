@@ -6,7 +6,7 @@ import jax.numpy as jnp
 
 from repro.core.policies import register
 from repro.core.policies.base import (LockPolicy, QUEUED, deq, enq, grant,
-                                      park, qlen)
+                                      lock_of, park, qlen)
 
 
 @register
@@ -17,7 +17,7 @@ class FifoPolicy(LockPolicy):
     host_dispatch = "fair"
 
     def on_acquire(self, st, cfg, tb, pm, c, t, cond):
-        l = tb.seg_lock[st.seg[c]]
+        l = lock_of(st, cfg, tb, c)
         free = st.holder[l] == -1
         q_empty = qlen(st, l, 0) == 0
         grab = jnp.logical_and(jnp.logical_and(free, q_empty), cond)

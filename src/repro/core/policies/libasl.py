@@ -11,8 +11,8 @@ import jax.numpy as jnp
 from repro.core.aimd import aimd_update
 from repro.core.policies import register
 from repro.core.policies.base import (INF, LockPolicy, QUEUED, STANDBY, deq,
-                                      enq, grant, park, qlen, ticks,
-                                      weighted_pick)
+                                      enq, grant, lock_of, lock_vec, park,
+                                      qlen, ticks, weighted_pick)
 
 
 @register
@@ -26,7 +26,7 @@ class LibASLPolicy(LockPolicy):
     host_dispatch = "asl"
 
     def on_acquire(self, st, cfg, tb, pm, c, t, cond):
-        l = tb.seg_lock[st.seg[c]]
+        l = lock_of(st, cfg, tb, c)
         is_big = tb.big[c] == 1
         free = st.holder[l] == -1
         q_empty = qlen(st, l, 0) == 0
@@ -51,7 +51,7 @@ class LibASLPolicy(LockPolicy):
 
     def on_standby_expiry(self, st, cfg, tb, pm, c, t, cond):
         """Reorder window expired -> enqueue FIFO (Alg.1 line 16)."""
-        l = tb.seg_lock[st.seg[c]]
+        l = lock_of(st, cfg, tb, c)
         free = jnp.logical_and(st.holder[l] == -1, qlen(st, l, 0) == 0)
         grab = jnp.logical_and(free, cond)
         wait = jnp.logical_and(jnp.logical_not(free), cond)
@@ -79,7 +79,7 @@ class LibASLPolicy(LockPolicy):
         # Queue empty -> a standby competitor may grab the free lock
         # (Algorithm 1: "when the waiting queue is empty").
         standby = jnp.logical_and(st.phase == STANDBY,
-                                  tb.seg_lock[st.seg] == l)
+                                  lock_vec(st, cfg, tb) == l)
         key, sub = jax.random.split(st.key)
         pick, any_standby = weighted_pick(sub, jnp.where(standby, 1.0, 0.0))
         any_standby = jnp.logical_and(

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 
 from repro.core.policies import register
 from repro.core.policies.base import (LockPolicy, QUEUED, deq, enq, grant,
-                                      park, qlen)
+                                      lock_of, park, qlen)
 
 
 @register
@@ -19,7 +19,7 @@ class PropPolicy(LockPolicy):
     sweep_axes = {"prop_n": "prop_n"}   # built-in SimParams field
 
     def on_acquire(self, st, cfg, tb, pm, c, t, cond):
-        l = tb.seg_lock[st.seg[c]]
+        l = lock_of(st, cfg, tb, c)
         is_big = tb.big[c] == 1
         free = st.holder[l] == -1
         q_empty = jnp.logical_and(qlen(st, l, 0) == 0, qlen(st, l, 1) == 0)

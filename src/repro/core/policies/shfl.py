@@ -44,7 +44,7 @@ class ShflPolicy(LockPolicy):
         return queueless_acquire(st, cfg, tb, pm, c, t, cond)
 
     def pick_next(self, st, cfg, tb, pm, l, t, cond):
-        waiting = waiting_mask(st, tb, l)
+        waiting = waiting_mask(st, cfg, tb, l)
         arr = jnp.where(waiting, st.attempt_t, INF)
         head = jnp.argmin(arr).astype(jnp.int32)
         big_wait = jnp.logical_and(waiting, tb.big == 1)

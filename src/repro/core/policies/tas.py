@@ -10,8 +10,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.policies import register
-from repro.core.policies.base import (SPIN, LockPolicy, grant, park,
-                                      weighted_pick)
+from repro.core.policies.base import (SPIN, LockPolicy, grant, lock_of,
+                                      lock_vec, park, weighted_pick)
 
 
 @register
@@ -24,7 +24,7 @@ class TasPolicy(LockPolicy):
     host_dispatch = "fast-only"
 
     def on_acquire(self, st, cfg, tb, pm, c, t, cond):
-        l = tb.seg_lock[st.seg[c]]
+        l = lock_of(st, cfg, tb, c)
         free = st.holder[l] == -1
         # Free -> grab; else spin (woken at release by weighted draw).
         grab = jnp.logical_and(free, cond)
@@ -34,7 +34,7 @@ class TasPolicy(LockPolicy):
 
     def pick_next(self, st, cfg, tb, pm, l, t, cond):
         spinning = jnp.logical_and(st.phase == SPIN,
-                                   tb.seg_lock[st.seg] == l)
+                                   lock_vec(st, cfg, tb) == l)
         key, sub = jax.random.split(st.key)
         w = jnp.where(tb.big == 1, pm.w_big, 1.0)
         winner, any_spin = weighted_pick(sub, jnp.where(spinning, w, 0.0))

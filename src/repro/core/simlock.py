@@ -76,8 +76,10 @@ from repro.core.policies.base import weighted_pick as _weighted_pick
 from repro.core import columns as colreg
 from repro.core import energy as _energy  # registers the DVFS/power columns
 from repro.dist.hlo_analysis import executable_stats
+from repro.core.policies.base import lock_of as _lock_of
 from repro.faults import model as flt
 from repro.workloads import generators as wlg
+from repro.workloads import keys as wlk
 
 # name -> stable integer id, derived from the policy registry
 # (registration order; the first four match the pre-registry constants).
@@ -124,6 +126,16 @@ def _validate_config(cfg) -> None:
     for name in ("n_cores", "n_locks", "epcap", "max_events", "chunk",
                  "prop_n"):
         chk(name, 1)
+    chk("n_keys", 0)
+    import math
+    if not math.isfinite(cfg.zipf_theta) or cfg.zipf_theta < 0.0:
+        raise ValueError("SimConfig.zipf_theta must be finite and >= 0, "
+                         f"got {cfg.zipf_theta!r}")
+    if 0 < cfg.n_keys < cfg.n_locks:
+        raise ValueError(
+            f"SimConfig.n_keys={cfg.n_keys} is smaller than "
+            f"n_locks={cfg.n_locks}: every lock needs at least one key "
+            f"(raise n_keys or lower n_locks)")
     if len(cfg.seg_cs_us) != len(cfg.seg_noncrit_us) or \
             len(cfg.seg_cs_us) != len(cfg.seg_lock):
         raise ValueError("seg_noncrit_us / seg_cs_us / seg_lock must have "
@@ -188,6 +200,17 @@ class SimConfig:
     seg_lock: tuple = (0,)
     inter_epoch_us: float = 5.0
     n_locks: int = 1
+    # Key-sharded datastore mode (repro.workloads.keys, docs/
+    # workloads.md §Key-sharded traffic): ``n_keys > 0`` switches every
+    # epoch's lock from the static per-segment program (``seg_lock``) to
+    # a per-(core, epoch) Zipf(``zipf_theta``)-drawn key bucketed over
+    # the first ``n_locks`` locks (key % n_locks — rank-preserving, so
+    # lock 0 is the hot bucket).  Only the on/off bit is jit-static; the
+    # key count, exponent and active lock count ride traced in
+    # SimParams, so ``n_keys`` / ``zipf_theta`` / ``n_locks`` sweep as
+    # batch axes (``n_locks`` stays the padded state shape).
+    n_keys: int = 0
+    zipf_theta: float = 0.99      # YCSB-default skew; 0 = uniform
     pct: float = 99.0
     w_big: float = 1.0            # TAS affinity weight
     prop_n: int = 10              # proportional policy ratio
@@ -344,6 +367,17 @@ class SimParams(NamedTuple):
     churn_period: jnp.ndarray    # i32 churn slot length (ticks, >= 1)
     straggle_rate: jnp.ndarray   # f32 P(CS spike)
     straggle_scale: jnp.ndarray  # f32 CS spike multiplier
+    # Key-sharded traffic (repro.workloads.keys; live ops only when
+    # cfg.n_keys > 0, the static key-shard gate).  The three sampler
+    # constants are host-precomputed per cell by zipf_consts — they are
+    # pure functions of (ks_keys, ks_theta), carried traced so key-count
+    # and exponent sweeps share one executable.
+    ks_keys: jnp.ndarray     # i32 active key count
+    ks_theta: jnp.ndarray    # f32 Zipf exponent (pole-nudged)
+    ks_zeta: jnp.ndarray     # f32 harmonic H_{n,theta}
+    ks_eta: jnp.ndarray      # f32 Gray/YCSB eta constant
+    ks_alpha: jnp.ndarray    # f32 1/(1-theta)
+    ks_locks: jnp.ndarray    # i32 active lock count (<= L padded)
     # Policy-owned traced knobs (LockPolicy.init_params; {} for the
     # built-in four) — swept via the policy's declared sweep_axes.
     pol: dict
@@ -376,6 +410,10 @@ class SimState(NamedTuple):
     energy: jnp.ndarray       # f32[N] accumulated energy (watt-ticks;
     #                           stays all-zero unless a power table is
     #                           set — the static _energy_on gate)
+    cur_lock: jnp.ndarray     # i32[N] this epoch's key-drawn lock (all
+    #                           zero unless cfg.n_keys > 0 — _ks_on)
+    cur_rw: jnp.ndarray       # f32[N] this epoch's read/write uniform
+    #                           (CREW policies; 1.0 = read when unused)
     # Policy-owned state slots (LockPolicy.init_state; {} for policies
     # that need none — e.g. shfl's per-lock shuffle counter).
     pol: dict
@@ -408,6 +446,12 @@ def _canon(cfg: SimConfig) -> SimConfig:
         churn_period_us=1.0,
         straggle_rate=1.0 if cfg.straggle_rate > 0.0 else 0.0,
         straggle_scale=1.0,
+        # Key sharding: one static gate bit (do the per-epoch key draws
+        # exist in the HLO?).  The canonical on-value is n_locks, not 1,
+        # so the canonicalized config still satisfies the key-count >=
+        # lock-count validation; the real count rides in SimParams.
+        n_keys=cfg.n_locks if cfg.n_keys > 0 else 0,
+        zipf_theta=0.0,
         slo_scale=(), wl_service_per_core=(), fault_mask=(),
         dvfs=(), columns=(),
         # Energy: one static on/off bit (whether the integration ops
@@ -415,6 +459,12 @@ def _canon(cfg: SimConfig) -> SimConfig:
         p_cs=(0.0,) if _energy_on(cfg) else (),
         p_spin=(), p_park=(), p_idle=(),
         policy_kw=())
+
+
+def _ks_on(cfg: SimConfig) -> bool:
+    """The single static key-shard gate: are epochs' locks drawn from
+    the Zipf key stream (vs the static segment program)?"""
+    return cfg.n_keys > 0
 
 
 def _energy_on(cfg: SimConfig) -> bool:
@@ -499,6 +549,8 @@ def build_params(cfg: SimConfig, slo_us, seed=0, n_active=None) -> SimParams:
             f"{cfg.policy!r}; known knobs: {sorted(pol_params)}")
     slo = (slo_us * US).astype(jnp.float32) if hasattr(slo_us, "astype") \
         else jnp.float32(_ticks(slo_us))
+    ks_theta, ks_zeta, ks_eta, ks_alpha = wlk.zipf_consts(
+        max(cfg.n_keys, 1), cfg.zipf_theta)
     return SimParams(
         slo=slo,
         w_big=jnp.float32(cfg.w_big),
@@ -529,6 +581,12 @@ def build_params(cfg: SimConfig, slo_us, seed=0, n_active=None) -> SimParams:
         churn_period=jnp.int32(max(_ticks(cfg.churn_period_us), 1)),
         straggle_rate=jnp.float32(cfg.straggle_rate),
         straggle_scale=jnp.float32(cfg.straggle_scale),
+        ks_keys=jnp.int32(cfg.n_keys),
+        ks_theta=jnp.float32(ks_theta),
+        ks_zeta=jnp.float32(ks_zeta),
+        ks_eta=jnp.float32(ks_eta),
+        ks_alpha=jnp.float32(ks_alpha),
+        ks_locks=jnp.int32(cfg.n_locks),
         pol=pol_params)
 
 
@@ -578,6 +636,22 @@ def _init_state(cfg: SimConfig, tb: SimTables, pm: SimParams,
         arr0 = jnp.zeros(n, jnp.int32)
         phase0 = jnp.zeros(n, jnp.int32)
         ready0 = jnp.where(active, nc0 + stagger, INF)
+    if _ks_on(cfg):
+        # Epoch-0 key draws (repro.workloads.keys) — counter-pure in
+        # (seed, core, 0) like every workload draw.  Open-loop runs
+        # redraw index 0 at the first ARRIVAL event (same value).
+        cores = jnp.arange(n, dtype=jnp.int32)
+        cur_lock0 = jax.vmap(lambda c: wlk.epoch_lock(
+            pm.seed, c, 0, pm.ks_keys, pm.ks_theta, pm.ks_zeta,
+            pm.ks_eta, pm.ks_alpha, pm.ks_locks))(cores)
+        if policies.get(cfg.policy).uses_rw:
+            cur_rw0 = jax.vmap(
+                lambda c: wlk.epoch_rw_u(pm.seed, c, 0))(cores)
+        else:
+            cur_rw0 = jnp.ones(n, jnp.float32)
+    else:
+        cur_lock0 = jnp.zeros(n, jnp.int32)
+        cur_rw0 = jnp.ones(n, jnp.float32)
     return SimState(
         t=jnp.int32(0),
         key=jax.random.PRNGKey(pm.seed),
@@ -603,6 +677,8 @@ def _init_state(cfg: SimConfig, tb: SimTables, pm: SimParams,
         events=jnp.int32(0),
         arr_t=arr0,
         energy=jnp.zeros(n, jnp.float32),
+        cur_lock=cur_lock0,
+        cur_rw=cur_rw0,
         pol=policies.get(cfg.policy).init_state(cfg, tb, pm),
     )
 
@@ -712,6 +788,20 @@ def _handle_arrival(st: SimState, cfg: SimConfig, tb: SimTables,
     nxt = a + jnp.maximum((base * gap).astype(jnp.int32), 1)
     nc0 = (tb.nc_dur[c, 0].astype(jnp.float32)
            * st.scale[c]).astype(jnp.int32)
+    if _ks_on(cfg):
+        # The epoch starting at this arrival touches key index
+        # ep_cnt[c] (arrival i begins epoch i) — counter-pure, so the
+        # key stream is independent of backlog and event interleaving.
+        ep = st.ep_cnt[c]
+        lk = wlk.epoch_lock(pm.seed, c, ep, pm.ks_keys, pm.ks_theta,
+                            pm.ks_zeta, pm.ks_eta, pm.ks_alpha,
+                            pm.ks_locks)
+        st = st._replace(cur_lock=st.cur_lock.at[c].set(
+            jnp.where(cond, lk, st.cur_lock[c])))
+        if policies.get(cfg.policy).uses_rw:
+            rw = wlk.epoch_rw_u(pm.seed, c, ep)
+            st = st._replace(cur_rw=st.cur_rw.at[c].set(
+                jnp.where(cond, rw, st.cur_rw[c])))
     return st._replace(
         arr_t=st.arr_t.at[c].set(jnp.where(cond, nxt, st.arr_t[c])),
         wl_on=st.wl_on.at[c].set(jnp.where(cond, on, st.wl_on[c])),
@@ -726,8 +816,8 @@ def _handle_release(st: SimState, cfg: SimConfig, tb: SimTables,
                     pm: SimParams, c, t, cond) -> SimState:
     pol = policies.get(cfg.policy)
     s = st.seg[c]
-    l = tb.seg_lock[s]
-    n_seg = len(cfg.seg_cs_us)
+    l = _lock_of(st, cfg, tb, c)    # key-drawn lock when _ks_on, else
+    n_seg = len(cfg.seg_cs_us)      # the static segment program's
 
     # acquire->release latency (paper Figure 1 metric)
     cs_lat, cs_cnt = _record(st.cs_lat, st.cs_cnt, c,
@@ -792,6 +882,26 @@ def _handle_release(st: SimState, cfg: SimConfig, tb: SimTables,
     else:
         def _sc(d):
             return d
+
+    if _ks_on(cfg) and not cfg.wl_open:
+        # Closed loop: draw the NEXT epoch's key at epoch end (ep_cnt
+        # was bumped above, so it is the next epoch's index; epoch 0 was
+        # drawn in _init_state).  Open loop draws at the true arrival in
+        # _handle_arrival instead.  Updating cur_lock here is safe: the
+        # releaser's old lock ``l`` was captured above, and the waiter
+        # scans in pick_next never include the releaser (it is not
+        # parked).
+        ep = st.ep_cnt[c]
+        upd = jnp.logical_and(last, cond)
+        lk = wlk.epoch_lock(pm.seed, c, ep, pm.ks_keys, pm.ks_theta,
+                            pm.ks_zeta, pm.ks_eta, pm.ks_alpha,
+                            pm.ks_locks)
+        st = st._replace(cur_lock=st.cur_lock.at[c].set(
+            jnp.where(upd, lk, st.cur_lock[c])))
+        if pol.uses_rw:
+            rw = wlk.epoch_rw_u(pm.seed, c, ep)
+            st = st._replace(cur_rw=st.cur_rw.at[c].set(
+                jnp.where(upd, rw, st.cur_rw[c])))
 
     # Advance the program: next segment, or — epoch done — the closed-loop
     # think gap (inter-epoch + segment-0 noncrit), or the open-loop
@@ -1042,9 +1152,18 @@ _PARAM_AXES = {
     "churn_rate": "churn_rate",
     "straggle_rate": "straggle_rate",
     "straggle_scale": "straggle_scale",
+    # Key-sharded datastore axes (repro.workloads.keys; require
+    # cfg.n_keys > 0 — sweep() flips the static gate on automatically
+    # when the n_keys axis is present).  n_locks cells run against the
+    # padded cfg.n_locks vectors with the effective count traced in
+    # SimParams.ks_locks, mirroring the n_cores active-mask trick.
+    "n_keys": "ks_keys",
+    "zipf_theta": "ks_theta",
+    "n_locks": "ks_locks",
 }
 _WL_AXES = ("arrival_rate", "cv", "mix", "mix_scale", "burstiness",
             "burst_len")
+_KS_AXES = ("n_keys", "zipf_theta", "n_locks")
 # Statically-gated features: sweeping the axis must flip the gate field
 # on in the template config (the on/off bit is part of the jit key).
 _GATE_AXES = ("long_epoch_prob", "wakeup_us", "preempt_rate",
@@ -1117,6 +1236,19 @@ def _cell_params(cfg: SimConfig, cell: dict, slo_us, seed) -> SimParams:
     if "preempt_scale" in cell:
         pm = pm._replace(preempt_scale=jnp.float32(
             _ticks(cell["preempt_scale"])))
+    if any(a in cell for a in _KS_AXES):
+        # n_keys / zipf_theta change the Zipf sampler constants, which
+        # are host-derived (repro.workloads.keys.zipf_consts) — rebuild
+        # the whole constant block so every cell's traced values agree
+        # with what build_params would produce for that config.
+        nk = int(cell.get("n_keys", cfg.n_keys))
+        th = float(cell.get("zipf_theta", cfg.zipf_theta))
+        ks_th, ks_ze, ks_et, ks_al = wlk.zipf_consts(max(nk, 1), th)
+        pm = pm._replace(
+            ks_keys=jnp.int32(nk), ks_theta=jnp.float32(ks_th),
+            ks_zeta=jnp.float32(ks_ze), ks_eta=jnp.float32(ks_et),
+            ks_alpha=jnp.float32(ks_al),
+            ks_locks=jnp.int32(cell.get("n_locks", cfg.n_locks)))
     if "window0_us" in cell:
         # A swept initial window plays the role of default_window_us (the
         # seed's LibASL-MAX cells set both), so the unit floor follows it.
@@ -1246,6 +1378,25 @@ def sweep(cfg: SimConfig, axes: dict, *, slo_us=1e9, seed=0,
             cfg = dataclasses.replace(cfg, **{gate: max(axes[gate])})
     if not cfg.wl and any(a in axes for a in _WL_AXES):
         cfg = dataclasses.replace(cfg, wl=True)
+    # Sweeping n_keys flips the key-shard gate on (the on/off bit is
+    # part of the canonical jit key); the per-cell counts then ride
+    # traced.  The other key axes only make sense with the gate on.
+    if "n_keys" in axes:
+        if any(int(v) < 1 for v in axes["n_keys"]):
+            raise ValueError("n_keys axis values must be >= 1")
+        if not _ks_on(cfg):
+            cfg = dataclasses.replace(
+                cfg, n_keys=int(max(int(v) for v in axes["n_keys"])))
+    if not _ks_on(cfg) and any(a in axes for a in _KS_AXES):
+        bad = [a for a in _KS_AXES if a in axes]
+        raise ValueError(
+            f"sweep axes {bad} need the key-shard gate on: set "
+            f"SimConfig.n_keys > 0 (or include an n_keys axis)")
+    if "n_locks" in axes:
+        if any(not 1 <= int(v) <= cfg.n_locks for v in axes["n_locks"]):
+            raise ValueError(
+                f"n_locks axis values must lie in [1, cfg.n_locks="
+                f"{cfg.n_locks}] (the padded lock-vector size)")
     # Sweeping a power column with any nonzero watts must flip the
     # static energy gate on: the swept values ride in the per-cell
     # tables; the template only needs a non-empty power field so _canon
@@ -1270,6 +1421,14 @@ def sweep(cfg: SimConfig, axes: dict, *, slo_us=1e9, seed=0,
         raise ValueError("empty sweep")
     if "n_cores" in axes and max(axes["n_cores"]) > cfg.n_cores:
         raise ValueError("n_cores axis exceeds the padded cfg.n_cores")
+    if any(a in axes for a in _KS_AXES):
+        for cell in cells:
+            nk = int(cell.get("n_keys", cfg.n_keys))
+            nl = int(cell.get("n_locks", cfg.n_locks))
+            if nk < nl:
+                raise ValueError(
+                    f"sweep cell pairs n_keys={nk} with n_locks={nl}: "
+                    f"every lock needs at least one key")
 
     # Per-cell tables (rebuilt only when a program/column axis is swept).
     tbl_axes = table_axes()

@@ -17,6 +17,26 @@ replica slot — the replica pool is the lock.
   (fast replicas busy and the SLO is at risk) they take a slow replica.
   Low load => everything runs fast; high load => slow replicas absorb
   exactly as much spill as the SLO allows.
+
+Key-aware variants (the ``ks_*`` device policies' fleet analogues;
+docs/workloads.md §Key-sharded traffic): every request carries a
+Zipf-drawn key bucketed to ``bucket = key % n_buckets``; the *owner*
+replica of a bucket is ``fleet[bucket % n_replicas]`` with the fleet
+ordered fast-first, so hot buckets (low ids — the bucketing is
+rank-preserving) are owned by fast replicas.
+
+* ``key-erew`` — strict EREW sharding: a request is served ONLY by its
+  bucket's owner (earliest request whose owner is free dispatches).
+* ``key-crew`` — CREW: reads go to any free replica (fast preferred),
+  writes are owner-exclusive.
+* ``key-jbsq`` — bounded JBSQ(k): the FIFO head goes to the
+  least-loaded free replica (fewest dispatches), ignoring ownership —
+  the fairness-first contrast.
+
+The key/write streams are counter-pure (``STREAM_KEY``/``STREAM_RW``
+blocks, prefix-invariant in the arrival count) and are only drawn for
+key-aware policies, so every other policy is bit-identical to the
+pre-keyshard simulator.
 """
 
 from __future__ import annotations
@@ -30,10 +50,12 @@ from repro.core.aimd import AIMDWindow, unit_for
 from repro.core.policies import dispatch_names
 from repro.faults import host as flt_host
 from repro.faults.model import FaultSpec
+from repro.workloads import keys as wl_keys
 from repro.workloads import traces as wl_traces
 from repro.workloads.generators import (LEGACY_LOGNORMAL_CV,
-                                        LEGACY_LOGNORMAL_MEAN, ArrivalSpec,
-                                        ServiceSpec)
+                                        LEGACY_LOGNORMAL_MEAN, STREAM_KEY,
+                                        STREAM_RW, ArrivalSpec, ServiceSpec,
+                                        uniform_block)
 
 # Fleet-dispatch policy names, keyed off the lock-policy registry (each
 # LockPolicy's host_dispatch: fifo -> "fair" round-robin, tas
@@ -69,7 +91,9 @@ def simulate_dispatch(policy: str, *, n_fast=4, n_slow=4, slow_factor=3.0,
                       service: ServiceSpec = None, trace=None,
                       timeout_s=None, max_retries=0,
                       backoff_base=0.05, backoff_cap=2.0,
-                      admit_cap=None, faults: FaultSpec = None):
+                      admit_cap=None, faults: FaultSpec = None,
+                      n_buckets=64, n_keys=1024, zipf_theta=0.99,
+                      write_frac=0.5):
     """Event-driven M/G/k with heterogeneous servers; returns metrics.
 
     ASL: a queued request may wait (stand by) for a fast replica until its
@@ -95,6 +119,12 @@ def simulate_dispatch(policy: str, *, n_fast=4, n_slow=4, slow_factor=3.0,
       (churn: a replica accepts no new work during "off" slots),
       straggler service spikes, and preemption stalls, all counter-pure
       per (replica, dispatch index) via ``repro.faults.host``.
+
+    Key-aware policies (``key-erew``/``key-crew``/``key-jbsq``) draw a
+    Zipf(``n_keys``, ``zipf_theta``) key and a read/write bit per
+    request (``write_frac`` = write probability) and bucket keys to
+    ``key % n_buckets``; other policies never draw the streams (their
+    runs are bit-identical with the knobs at any value).
     """
     if policy not in DISPATCH_POLICIES:
         raise ValueError(f"unknown dispatch policy {policy!r}; "
@@ -108,15 +138,35 @@ def simulate_dispatch(policy: str, *, n_fast=4, n_slow=4, slow_factor=3.0,
             duration_s, seed)
     fast = [Replica(1.0, idx=i) for i in range(n_fast)]
     slow = [Replica(slow_factor, idx=n_fast + i) for i in range(n_slow)]
+    fleet = fast + slow            # fast-first: hot buckets own fast
+    n_rep = len(fleet)
     win = AIMDWindow(window=default_window,
                      unit=unit_for(default_window, pct), pct=pct,
                      max_window=max_window)
     arrivals = list(zip(trace.arrival_t.tolist(),
                         trace.service_s.tolist()))
+    keyed = policy.startswith("key-")
+    if keyed and arrivals:
+        # Counter-pure key + read/write streams, prefix-invariant in the
+        # arrival count — the device engine's epoch-draw composition
+        # (uniform -> Zipf rank -> bucket) at fleet scale.
+        n_arr = len(arrivals)
+        th, ze, et, al = wl_keys.zipf_consts(max(int(n_keys), 1),
+                                             zipf_theta)
+        ranks = np.asarray(wl_keys.zipf_key(
+            uniform_block(seed, STREAM_KEY, n_arr).astype(np.float32),
+            n_keys, th, ze, et, al))
+        bks = (ranks % max(int(n_buckets), 1)).tolist()
+        wrs = (uniform_block(seed, STREAM_RW, n_arr)
+               < write_frac).tolist()
+    else:
+        bks = [0] * len(arrivals)
+        wrs = [False] * len(arrivals)
+    arrivals = [(t, s, b, w)
+                for (t, s), b, w in zip(arrivals, bks, wrs)]
 
     chaos_faults = faults if faults is not None and faults.active else None
     if chaos_faults is not None:
-        n_rep = n_fast + n_slow
         # Precomputed counter-pure schedules (repro.faults.host): per-
         # (replica, slot) outages; per-(replica, dispatch) spike/stall.
         out_mask = flt_host.outage_mask(chaos_faults, n_rep,
@@ -137,9 +187,11 @@ def simulate_dispatch(policy: str, *, n_fast=4, n_slow=4, slow_factor=3.0,
     lat = []
     served_fast = served_slow = 0
     timeouts = retried = drops = lost = 0
-    queue = []          # (arrival_t, svc, win_dead, timeout_dead, tries)
+    queue = []    # (arrival_t, svc, win_dead, timeout_dead, tries,
+    #               bucket, write) — the last two are the key columns
+    #               (0/False for non-key policies)
     events = []         # completion heap
-    retry_q = []        # (due_t, seq, arrival_t, svc, tries)
+    retry_q = []        # (due_t, seq, arrival_t, svc, tries, bucket, wr)
     seq = 0
     clock = 0.0
     ai = 0
@@ -179,18 +231,18 @@ def simulate_dispatch(policy: str, *, n_fast=4, n_slow=4, slow_factor=3.0,
         while events and events[0] <= clock:
             heapq.heappop(events)
         while retry_q and retry_q[0][0] <= clock:
-            _, _, a0, svc, tries = heapq.heappop(retry_q)
+            _, _, a0, svc, tries, bk, wr = heapq.heappop(retry_q)
             queue.append((a0, svc, clock + win.window,
-                          clock + timeout_s, tries))
+                          clock + timeout_s, tries, bk, wr))
         while ai < len(arrivals) and arrivals[ai][0] <= clock:
-            a, svc = arrivals[ai]
+            a, svc, bk, wr = arrivals[ai]
             ai += 1
             if admit_cap is not None and len(queue) >= admit_cap:
                 drops += 1           # admission control: shed at arrival
                 continue
             queue.append((a, svc, a + win.window,
                           (a + timeout_s) if timeout_s is not None
-                          else np.inf, 0))
+                          else np.inf, 0, bk, wr))
         if timeout_s is not None:
             # Timeout detection: cancel expired queue entries; with
             # retries left they re-arrive after a capped exp backoff.
@@ -205,7 +257,8 @@ def simulate_dispatch(policy: str, *, n_fast=4, n_slow=4, slow_factor=3.0,
                         seq += 1
                         heapq.heappush(retry_q,
                                        (clock + backoff, seq, row[0],
-                                        row[1], row[4] + 1))
+                                        row[1], row[4] + 1, row[5],
+                                        row[6]))
                     else:
                         lost += 1
                 else:
@@ -228,6 +281,38 @@ def simulate_dispatch(policy: str, *, n_fast=4, n_slow=4, slow_factor=3.0,
                                    % len(cands)]
             elif policy == "fast-only":
                 target = rf
+            elif policy == "key-erew":
+                # Strict EREW sharding: the earliest queued request
+                # whose bucket-owner replica is free dispatches to it;
+                # everyone else waits for their owner.
+                for i, row in enumerate(queue):
+                    r = fleet[row[5] % n_rep]
+                    if r.busy_until <= clock and not rep_out(r, clock):
+                        pick, target = i, r
+                        break
+            elif policy == "key-crew":
+                # CREW: reads take any free replica (fast preferred);
+                # writes are owner-exclusive.
+                for i, row in enumerate(queue):
+                    if row[6]:
+                        r = fleet[row[5] % n_rep]
+                        if r.busy_until <= clock \
+                                and not rep_out(r, clock):
+                            pick, target = i, r
+                            break
+                    elif rf is not None or rs is not None:
+                        pick = i
+                        target = rf if rf is not None else rs
+                        break
+            elif policy == "key-jbsq":
+                # JBSQ-style: the FIFO head joins the least-loaded
+                # free replica (fewest dispatches), ownership-blind —
+                # the fairness-first contrast to key-erew.
+                cands = [r for r in fleet if r.busy_until <= clock
+                         and not rep_out(r, clock)]
+                if cands:
+                    target = min(cands,
+                                 key=lambda r: (r.served, r.idx))
             else:  # asl
                 if rf is not None:
                     target = rf    # fast replica: FIFO head takes it
@@ -237,7 +322,7 @@ def simulate_dispatch(policy: str, *, n_fast=4, n_slow=4, slow_factor=3.0,
                         pick = i
                         target = rs
             if target is not None:
-                a, svc, dead, to_dead, tries = queue[pick]
+                a, svc, dead, to_dead, tries, bk, wr = queue[pick]
                 queue.pop(pick)
                 dur = svc * target.speed
                 if chaos_faults is not None:
@@ -247,7 +332,7 @@ def simulate_dispatch(policy: str, *, n_fast=4, n_slow=4, slow_factor=3.0,
                     if spikes[target.idx][d_ix]:
                         dur *= chaos_faults.straggle_scale
                     dur += stalls[target.idx][d_ix]
-                    target.served += 1
+                target.served += 1
                 target.busy_until = clock + dur
                 heapq.heappush(events, clock + dur)
                 latency = clock + dur - a

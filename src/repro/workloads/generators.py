@@ -53,6 +53,10 @@ STREAM_STRAGGLE = 0x7786
 STREAM_PREEMPT = 0x7787
 STREAM_CHURN = 0x7788
 STREAM_SPIKE = 0x7789
+# Key-sharded datastore streams (repro.workloads.keys): the per-epoch
+# Zipf key draw and the CREW read/write classification bit.
+STREAM_KEY = 0x778A
+STREAM_RW = 0x778B
 
 
 # --------------------------------------------------------------------------

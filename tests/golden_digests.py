@@ -1,0 +1,100 @@
+"""Golden sha256 digests of the simulator's outputs — the bit-parity
+harness for engine refactors.
+
+A refactor that claims "default runs are bit-identical" must prove it
+against digests captured from the PRE-refactor engine: run this module
+as a script AT THE OLD COMMIT to (re)generate
+``tests/data/keyshard_golden.json``, land the JSON with the refactor,
+and let ``tests/test_keyshard.py::test_pre_refactor_digest_parity``
+replay the same configs on the new engine and compare field-by-field.
+
+    PYTHONPATH=src python tests/golden_digests.py
+
+The capture deliberately uses only the stable public API (``SimConfig``
+/ ``run`` / ``sweep`` / ``summarize``) so the script itself is valid on
+both sides of the refactor.  Digests cover every state field by NAME
+(``pol.*`` entries keyed individually): a refactor may ADD fields — the
+parity test only checks the fields the golden file names.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import pathlib
+import sys
+
+import numpy as np
+
+GOLDEN = pathlib.Path(__file__).parent / "data" / "keyshard_golden.json"
+
+#: Per-policy run/sweep shapes.  Small horizons (the digest only needs
+#: every code path exercised, not converged statistics) but big enough
+#: that queues form and windows adapt.
+SIM_US = 4_000.0
+SLO_US = 80.0
+SEED = 3
+SWEEP_AXES = {"slo_us": [40.0, 90.0], "n_cores": [4, 8]}
+
+
+def _sha(x) -> str:
+    a = np.ascontiguousarray(np.asarray(x))
+    return hashlib.sha256(a.tobytes()).hexdigest()
+
+
+def digest_state(st) -> dict:
+    """name -> sha256 of the raw bytes, SimState.pol keyed per-entry."""
+    out = {}
+    for name, val in st._asdict().items():
+        if name == "pol":
+            for k in sorted(val):
+                out[f"pol.{k}"] = _sha(val[k])
+        else:
+            out[name] = _sha(val)
+    return out
+
+
+def digest_summary(summary: dict) -> str:
+    return hashlib.sha256(
+        json.dumps(summary, sort_keys=True).encode()).hexdigest()
+
+
+def capture_policy(name: str) -> dict:
+    """Digest single / sweep / summary outputs for ONE registered
+    policy, plus a stochastic closed-loop and an open-loop variant."""
+    from repro.core import simlock as sl
+
+    cfg = sl.SimConfig(policy=name, sim_time_us=SIM_US)
+    st = sl.run(cfg, SLO_US, seed=SEED)
+    rec = {"single": digest_state(st),
+           "summary": digest_summary(
+               sl.summarize(cfg, st, slo_us=SLO_US))}
+    st_sw, _ = sl.sweep(cfg, dict(SWEEP_AXES), slo_us=SLO_US,
+                        seed=SEED)
+    rec["sweep"] = digest_state(st_sw)
+    wl_cfg = sl.SimConfig(policy=name, wl=True, wl_process="poisson",
+                          wl_service="lognormal", wl_cv=1.5,
+                          sim_time_us=SIM_US)
+    rec["wl_single"] = digest_state(sl.run(wl_cfg, SLO_US, seed=SEED))
+    op_cfg = sl.SimConfig(policy=name, wl=True, wl_open=True,
+                          wl_process="poisson", wl_rate=0.8,
+                          sim_time_us=SIM_US)
+    rec["open_single"] = digest_state(sl.run(op_cfg, SLO_US, seed=SEED))
+    return rec
+
+
+def capture() -> dict:
+    """:func:`capture_policy` for every registered policy."""
+    from repro.core.policies import REGISTRY
+
+    return {name: capture_policy(name) for name in REGISTRY}
+
+
+def main():
+    GOLDEN.parent.mkdir(parents=True, exist_ok=True)
+    GOLDEN.write_text(json.dumps(capture(), indent=1, sort_keys=True))
+    print(f"wrote {GOLDEN}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

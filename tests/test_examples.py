@@ -36,6 +36,7 @@ def test_lock_microbench_smoke(capsys):
     out = capsys.readouterr().out
     assert "Figure 1" in out and "Figure 8b" in out
     assert "Load-latency" in out and "Open-loop" in out
+    assert "Key-sharded matrix" in out
     # every registered policy appears in the matrix section
     matrix = out.split("== Figure 1")[0]
     for name in REGISTRY:
