@@ -76,6 +76,28 @@ def bench_lines():
     return "see `artifacts/bench/results.json` + `bench_output.txt` CSV"
 
 
+def simbench_table():
+    """Per-figure table from BENCH_simlock.json.  Device-bound figures
+    record ``events_per_s``; host-bound aggregate figures (bench2/3/5)
+    record ``rows_per_s`` — both shapes render here."""
+    f = ROOT / "BENCH_simlock.json"
+    if not f.exists():
+        return "(run `python -m benchmarks.simperf` first)"
+    rec = json.loads(f.read_text())
+    lines = ["| figure | rows | wall | compilations | throughput |",
+             "|---|---|---|---|---|"]
+    for name, d in rec.get("figures", {}).items():
+        if d.get("events_per_s"):
+            tput = f"{d['events_per_s']:,} events/s"
+        elif d.get("rows_per_s"):
+            tput = f"{d['rows_per_s']:g} rows/s (host)"
+        else:
+            tput = "-"
+        lines.append(f"| {name} | {d['rows']} | {_fmt_s(d['wall_s'])} | "
+                     f"{d.get('compilations', '-')} | {tput} |")
+    return "\n".join(lines)
+
+
 HEADER = """# EXPERIMENTS — Asymmetry-aware Scalable Locking on a multi-pod JAX framework
 
 Everything below is produced by checked-in code; regenerate with
@@ -108,6 +130,14 @@ reproduction (full rows in `artifacts/bench/results.json`):
 | heterogeneous epochs keep SLO (Fig 8c) | P99 <= SLO at all short/long mixes; tput up to 1.4x MCS |
 | little cores help at low contention (Fig 8g / Bench-5) | LibASL 1.54x vs big-only at low contention, 1.64x vs MCS-8 at high |
 | blocking locks: FIFO pays wakeup per handoff (Bench-6) | FIFO degrades faster with wakeup cost; simulator has no OS scheduler, so the paper's full 96% spin-then-park gap is out of scope (documented model limit) |
+
+### Simulator bench (BENCH_simlock.json)
+
+Wall clock, compilation count and throughput per checked-in figure run
+(`python -m benchmarks.simperf`). The merged multi-policy figures
+(loadlat/openloop/bench1) compile fewer executables than policies.
+
+{SIMBENCH}
 
 The threaded lock implementations (Algorithms 1-3 verbatim) are separately
 tested for mutual exclusion, FIFO order, bounded reordering and AIMD
@@ -272,7 +302,8 @@ def main():
     roof = _load_dir("roofline")
     base = _load_dir("roofline_baseline")
     doc = HEADER.format(DRYRUN=dryrun_table(dry),
-                        ROOFLINE=roofline_table(roof, base))
+                        ROOFLINE=roofline_table(roof, base),
+                        SIMBENCH=simbench_table())
     (ROOT / "EXPERIMENTS.md").write_text(doc)
     print(f"wrote {ROOT / 'EXPERIMENTS.md'} "
           f"({len(dry)} dryrun cells, {len(roof)} roofline cells)")

@@ -13,7 +13,11 @@ Sections:
                    energy_efficiency figure's one-executable-per-policy
                    discipline), a keyshard probe (EREW beats the CRCW
                    baseline under hot-key Zipf traffic, executable
-                   ceiling kept) + a sharded-vs-unsharded sweep parity
+                   ceiling kept), a merged-executable probe (a
+                   fig1-shaped policy x n_cores grid compiles <= 2
+                   executables via cfg.policy_set), an open-loop
+                   events/s floor on the recorded BENCH_simlock.json
+                   + a sharded-vs-unsharded sweep parity
                    probe; nonzero exit on failure.
                    Opt-in (not part of the default all-sections run): it
                    virtualizes 8 host devices and pins XLA threading,
@@ -370,6 +374,85 @@ def _keyshard_probe(results) -> bool:
     return ok
 
 
+# Device events/s floors for the two open-loop figures: >= ~5x the
+# pre-merge BENCH_simlock.json entries (openloop_loadlat 17609 ev/s,
+# loadlat_sweep 19057 ev/s — the per-policy executables before the
+# fused multi-policy sweep).  The gate reads the checked-in protocol
+# file, so the speedup cannot regress silently between recordings.
+OPENLOOP_EVS_FLOOR = 88_000
+LOADLAT_EVS_FLOOR = 95_000
+
+
+def _merged_exec_probe(results) -> bool:
+    """The merged multi-policy executable discipline: a fig1-shaped grid
+    (every registered policy x n_cores 1..8) swept with the full
+    registry as ``policy_set`` must compile at most 2 executables —
+    down from the per-policy path's <= n_policies — and every cell must
+    retire events (a policy whose handlers are not switch-merge-safe
+    would go silent or corrupt its neighbours)."""
+    import numpy as np
+
+    from repro.core import simlock as sl
+    from repro.core.policies import REGISTRY
+
+    names = tuple(REGISTRY)
+    cfg = sl.SimConfig(policy=names[0], policy_set=names,
+                       sim_time_us=1_500.0)
+    axes = {"policy": [], "n_cores": []}
+    for name in names:
+        for n in range(1, 9):
+            axes["policy"].append(name)
+            axes["n_cores"].append(n)
+    n0 = sl.n_batch_executables()
+    t0 = time.time()
+    st, _ = sl.sweep(cfg, axes, slo_us=60.0, product=False)
+    ev = np.asarray(st.events)
+    wall = time.time() - t0
+    execs = sl.n_batch_executables() - n0
+    alive = bool((ev > 0).all())
+    ok = bool(execs <= 2 and alive)
+    results["sim/merged_executable"] = {
+        "cells": int(ev.size), "policies": len(names),
+        "new_executables": int(execs), "all_cells_alive": alive,
+        "wall_s": round(wall, 2), "pass": ok}
+    _emit("sim/merged_executable", wall * 1e6 / ev.size,
+          f"cells={ev.size};policies={len(names)};execs={execs}(<=2);"
+          f"all_alive={alive};" + ("PASS" if ok else "FAIL"))
+    return ok
+
+
+def _openloop_floor_gate(results) -> bool:
+    """The recorded open-loop device throughput cannot silently regress:
+    BENCH_simlock.json (the checked-in simperf protocol) must show the
+    merged open-loop figures at/above the floors derived from the
+    pre-merge before/after, with fewer compilations than policies."""
+    bench = ART.parents[1] / "BENCH_simlock.json"
+    if not bench.exists():
+        results["sim/openloop_floor"] = {"pass": False,
+                                         "error": "no BENCH_simlock.json"}
+        _emit("sim/openloop_floor", 0.0, "no BENCH_simlock.json;FAIL")
+        return False
+    figs = json.loads(bench.read_text()).get("figures", {})
+    checks = {}
+    ok = True
+    for name, floor, n_pol in (("openloop_loadlat", OPENLOOP_EVS_FLOOR, 3),
+                               ("loadlat_sweep", LOADLAT_EVS_FLOOR, 4)):
+        d = figs.get(name, {})
+        evs = d.get("events_per_s") or 0
+        merged = d.get("compilations", n_pol) < n_pol
+        checks[name] = {"events_per_s": evs, "floor": floor,
+                        "compilations": d.get("compilations"),
+                        "policies": n_pol, "merged": merged}
+        ok = ok and evs >= floor and merged
+    results["sim/openloop_floor"] = {"checks": checks, "pass": bool(ok)}
+    _emit("sim/openloop_floor", 0.0,
+          ";".join(f"{n}={c['events_per_s']}ev/s(>={c['floor']}),"
+                   f"compiles={c['compilations']}(<{c['policies']})"
+                   for n, c in checks.items())
+          + (";PASS" if ok else ";FAIL"))
+    return bool(ok)
+
+
 def _sim_section(results, quick: bool) -> bool:
     """CI smoke gate for the simulator engine.  Runs the fig1 batched-vs-
     seed acceptance bench (the BENCH_simlock.json protocol, abridged) and
@@ -399,6 +482,8 @@ def _sim_section(results, quick: bool) -> bool:
     gate = _policy_matrix_probe(results) and gate
     gate = _energy_probe(results) and gate
     gate = _keyshard_probe(results) and gate
+    gate = _merged_exec_probe(results) and gate
+    gate = _openloop_floor_gate(results) and gate
 
     if len(jax.devices()) < 2:
         # The sharded half of the gate cannot run — that is itself a gate

@@ -172,15 +172,20 @@ def bench_figures(quick: bool, figs=None) -> dict:
             "wall_s": round(wall, 2),
             "compilations": _compiles() - c0,
             "events": events,
-            # None when the figure's rows are derived aggregates that do
-            # not carry raw per-cell summaries (bench2/3/5).
-            "events_per_s": round(events / max(wall, 1e-9)) if events
-            else None,
             "hlo": _hlo_accounting(h0),
         }
+        if events:
+            out[name]["events_per_s"] = round(events / max(wall, 1e-9))
+        else:
+            # Host-bound figures (bench2/3/5) emit derived aggregate rows
+            # with no raw per-cell summaries: a device events/s would be
+            # meaningless, so record host row throughput instead.
+            # benchmarks/report.py renders either shape.
+            out[name]["rows_per_s"] = round(len(rows) / max(wall, 1e-9), 2)
+        rate = (f"ev/s={out[name]['events_per_s']}" if events else
+                f"rows/s={out[name]['rows_per_s']}")
         print(f"{name:22s} rows={len(rows):3d} wall={wall:7.2f}s "
-              f"compiles={out[name]['compilations']} "
-              f"ev/s={out[name]['events_per_s']} "
+              f"compiles={out[name]['compilations']} {rate} "
               f"coll={out[name]['hlo']['collective_count']}", flush=True)
     return out
 

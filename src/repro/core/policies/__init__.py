@@ -47,6 +47,106 @@ def policy_ids() -> dict:
     return {name: i for i, name in enumerate(REGISTRY)}
 
 
+class MergedPolicy(LockPolicy):
+    """The union of several registered policies behind one LockPolicy —
+    the multi-policy executable's dispatch layer.
+
+    The member id rides *traced* in ``SimParams.pol_id``: every hook
+    applies each member's hook under ``cond AND (pol_id == member id)``,
+    so a whole policy x load grid compiles ONE executable and each sweep
+    cell runs exactly its own policy.  This is sound because hooks are
+    *fully conditional* (the switch-merge-safe contract of
+    :class:`LockPolicy`): a masked-off member commits nothing — not even
+    an RNG-key split — so each cell's trajectory is bit-identical to the
+    single-policy executable's.
+
+    Param/state slots union by name (the registry keeps pol-slot names
+    globally unique — e.g. ``shfl_bound`` / ``race_ctr`` / ``jbsq_k``);
+    a member only ever reads its own slots, so the union is inert for
+    masked-off cells.  ``uses_standby`` / ``uses_rw`` are any-member ORs
+    (the engine additionally masks the rw draws per cell, so a fifo cell
+    in a set containing ks_crew still digests ``cur_rw == 1.0``).
+    """
+
+    def __init__(self, names):
+        ids = policy_ids()
+        self.names = tuple(names)
+        self.members = tuple((ids[n], get(n)) for n in self.names)
+        self.name = "+".join(self.names)
+        self.uses_standby = any(m.uses_standby for _, m in self.members)
+        self.uses_rw = any(m.uses_rw for _, m in self.members)
+        self.param_slots = tuple(dict.fromkeys(
+            s for _, m in self.members for s in m.param_slots))
+        self.table_slots = tuple(dict.fromkeys(
+            s for _, m in self.members for s in m.table_slots))
+        self.state_slots = tuple(dict.fromkeys(
+            s for _, m in self.members for s in m.state_slots))
+        self.own_columns = tuple(dict.fromkeys(
+            c for _, m in self.members for c in m.own_columns))
+        self.sweep_axes = {}
+        for _, m in self.members:
+            for axis, slot in m.sweep_axes.items():
+                if self.sweep_axes.setdefault(axis, slot) != slot:
+                    raise ValueError(
+                        f"policy set {self.names} maps sweep axis "
+                        f"{axis!r} onto two different slots")
+
+    def rw_member_ids(self) -> tuple:
+        """Ids of members that read the per-epoch rw uniform — the
+        engine's per-cell rw-draw mask (see simlock._rw_gate)."""
+        return tuple(pid for pid, m in self.members if m.uses_rw)
+
+    def init_params(self, cfg) -> dict:
+        out = {}
+        for _, m in self.members:
+            out.update(m.init_params(cfg))
+        return out
+
+    def init_state(self, cfg, tb, pm) -> dict:
+        out = {}
+        for _, m in self.members:
+            out.update(m.init_state(cfg, tb, pm))
+        return out
+
+    def _fan(self, hook, st, cond, pm, args):
+        import jax.numpy as jnp
+        for pid, m in self.members:
+            st = getattr(m, hook)(
+                st, *args, jnp.logical_and(cond, pm.pol_id == pid))
+        return st
+
+    def on_acquire(self, st, cfg, tb, pm, c, t, cond):
+        return self._fan("on_acquire", st, cond, pm, (cfg, tb, pm, c, t))
+
+    def on_standby_expiry(self, st, cfg, tb, pm, c, t, cond):
+        import jax.numpy as jnp
+        for pid, m in self.members:
+            if m.uses_standby:
+                st = m.on_standby_expiry(
+                    st, cfg, tb, pm, c, t,
+                    jnp.logical_and(cond, pm.pol_id == pid))
+        return st
+
+    def on_release(self, st, cfg, tb, pm, c, t, ep_latency, last, cond):
+        return self._fan("on_release", st, cond, pm,
+                         (cfg, tb, pm, c, t, ep_latency, last))
+
+    def pick_next(self, st, cfg, tb, pm, l, t, cond):
+        return self._fan("pick_next", st, cond, pm, (cfg, tb, pm, l, t))
+
+
+_MERGED: dict = {}
+
+
+def merged(names) -> MergedPolicy:
+    """The cached :class:`MergedPolicy` for a policy-name tuple (one
+    instance per distinct ``SimConfig.policy_set``)."""
+    key = tuple(names)
+    if key not in _MERGED:
+        _MERGED[key] = MergedPolicy(key)
+    return _MERGED[key]
+
+
 def host_schedulers() -> dict:
     """Lock-policy name -> host admission-scheduler name (the
     asl_schedule analogue), for policies that have one."""

@@ -99,6 +99,19 @@ def _validate_config(cfg) -> None:
             f"unknown lock policy {cfg.policy!r}; registered: "
             f"{sorted(POLICIES)}"
             + (f" -- did you mean {hint[0]!r}?" if hint else ""))
+    if cfg.policy_set:
+        for p in cfg.policy_set:
+            if p not in POLICIES:
+                raise ValueError(
+                    f"policy_set entry {p!r} is not registered; "
+                    f"registered: {sorted(POLICIES)}")
+        if len(set(cfg.policy_set)) != len(cfg.policy_set):
+            raise ValueError(
+                f"policy_set has duplicates: {cfg.policy_set!r}")
+        if cfg.policy not in cfg.policy_set:
+            raise ValueError(
+                f"policy {cfg.policy!r} is not in "
+                f"policy_set {cfg.policy_set!r}")
 
     def chk(name, lo=None, hi=None, lo_open=False):
         v = getattr(cfg, name)
@@ -190,6 +203,23 @@ class SimConfig:
     """
 
     policy: str = "fifo"
+    # Merged multi-policy executable (docs/simulator.md §Fused step
+    # kernel & multi-policy executables): a non-empty tuple of
+    # registered policy names compiles ONE executable dispatching all
+    # of them on the *traced* ``SimParams.pol_id`` — a policy x load
+    # sweep grid then costs ~1 compilation instead of n_policies.
+    # ``policy`` must be a member (it picks this run's id); results are
+    # bit-identical to the single-policy executable (hooks are fully
+    # conditional, so masked-off members commit nothing).  Usually set
+    # via a ``"policy"`` sweep axis rather than by hand.
+    policy_set: tuple = ()
+    # Route the per-event fused step through the Pallas kernel
+    # (repro.kernels.simstep) instead of the plain jnp/XLA lowering.
+    # Bit-identical results either way (the kernel runs the same traced
+    # step); _canon keeps the bit in the jit key (different lowering ->
+    # different executable) but nothing else about sweep semantics
+    # changes.  CPU builds run the kernel in interpret mode.
+    use_pallas: bool = False
     n_cores: int = 8
     big: tuple = (1, 1, 1, 1, 0, 0, 0, 0)          # 4 big + 4 little (M1)
     speed_cs: tuple = (1.0,) * 4 + (3.75,) * 4     # CS slowdown (Sysbench gap)
@@ -336,10 +366,23 @@ class SimParams(NamedTuple):
     """Per-run traced scalars — the sweepable batch axes."""
 
     slo: jnp.ndarray         # f32 ticks
+    # Registry id of the policy THIS run dispatches (POLICIES[policy]).
+    # Traced, so a merged multi-policy executable (cfg.policy_set)
+    # selects each cell's member without recompiling; ignored by
+    # single-policy executables (whose hooks never read it).
+    pol_id: jnp.ndarray      # i32
     w_big: jnp.ndarray       # f32 TAS affinity weight
     prop_n: jnp.ndarray      # i32 proportional ratio
     n_active: jnp.ndarray    # i32 cores actually running (<= N padded)
     seed: jnp.ndarray        # i32 PRNG seed
+    # Sim horizon in ticks.  Traced (a ``sim_time_us`` sweep axis), so
+    # lanes of one batched executable may run *different* durations —
+    # the step-utilization lever: a vmapped while_loop steps every lane
+    # until the LAST one finishes, so giving low-rate lanes
+    # proportionally longer horizons means each lane-step retires a
+    # real event instead of a live-guard no-op.  Summaries normalize by
+    # the cell's own final clock, so per-cell metrics are unaffected.
+    horizon: jnp.ndarray     # i32 ticks
     long_prob: jnp.ndarray   # f32 long-epoch probability
     long_scale: jnp.ndarray  # f32 long-epoch noncrit scale
     wakeup: jnp.ndarray      # i32 parked-waiter handoff ticks
@@ -427,7 +470,15 @@ class SimState(NamedTuple):
 def _canon(cfg: SimConfig) -> SimConfig:
     n, s = cfg.n_cores, len(cfg.seg_cs_us)
     return dataclasses.replace(
-        cfg, big=(0,) * n, speed_cs=(1.0,) * n, speed_nc=(1.0,) * n,
+        cfg,
+        # Merged mode: the member actually run rides traced in
+        # SimParams.pol_id, so ``policy`` is wiped to the set's first
+        # member — every cell of a policy sweep shares one executable.
+        # (``policy_set`` itself stays: it fixes which handlers are in
+        # the HLO.  ``use_pallas`` also stays: a different lowering is
+        # a different executable, but never different results.)
+        policy=cfg.policy_set[0] if cfg.policy_set else cfg.policy,
+        big=(0,) * n, speed_cs=(1.0,) * n, speed_nc=(1.0,) * n,
         seg_noncrit_us=(0.0,) * s, seg_cs_us=(0.0,) * s, seg_lock=(0,) * s,
         inter_epoch_us=0.0, w_big=1.0, prop_n=1, default_window_us=0.0,
         # Only the on/off bit of the mix/wakeup/workload features is
@@ -473,6 +524,41 @@ def _energy_on(cfg: SimConfig) -> bool:
     ops but accumulate exact zeros, which is what the zero-power
     bit-purity probe asserts.)"""
     return bool(cfg.p_cs or cfg.p_spin or cfg.p_park or cfg.p_idle)
+
+
+def _active_policy(cfg: SimConfig):
+    """The policy object the compiled step dispatches through: the
+    registered singleton, or — merged mode — the cached
+    :class:`~repro.core.policies.MergedPolicy` for ``cfg.policy_set``
+    (hooks fan out over members masked on the traced pol_id)."""
+    if cfg.policy_set:
+        return policies.merged(cfg.policy_set)
+    return policies.get(cfg.policy)
+
+
+def _rw_draw_gate(cfg: SimConfig, pm) -> object:
+    """Does THIS run consume the per-epoch read/write uniform?
+
+    Single-policy configs return the policy's Python-literal
+    ``uses_rw`` (HLO-preserving: the draw ops only exist when True).
+    Merged sets return a traced mask over ``pm.pol_id`` so a non-rw
+    cell (e.g. fifo) sharing an executable with ks_crew keeps
+    ``cur_rw == 1.0`` bit-identically to its own executable."""
+    if not cfg.policy_set:
+        return policies.get(cfg.policy).uses_rw
+    ids = _active_policy(cfg).rw_member_ids()
+    if not ids:
+        return False
+    m = pm.pol_id == ids[0]
+    for pid in ids[1:]:
+        m = jnp.logical_or(m, pm.pol_id == pid)
+    return m
+
+
+def _and_gate(cond, gate):
+    """cond AND a _rw_draw_gate result (which may be the Python literal
+    True on the single-policy path — where the AND must vanish)."""
+    return cond if gate is True else jnp.logical_and(cond, gate)
 
 
 def build_tables(cfg: SimConfig) -> SimTables:
@@ -538,7 +624,7 @@ def with_columns(cfg: SimConfig, **cols) -> SimConfig:
 
 def build_params(cfg: SimConfig, slo_us, seed=0, n_active=None) -> SimParams:
     """SimParams from config defaults (each field is a sweep axis)."""
-    pol_params = policies.get(cfg.policy).init_params(cfg)
+    pol_params = _active_policy(cfg).init_params(cfg)
     # Every policy_kw key must land in a traced pol slot — a typo'd knob
     # silently running with its default would be the one misconfiguration
     # here that doesn't raise.
@@ -553,11 +639,13 @@ def build_params(cfg: SimConfig, slo_us, seed=0, n_active=None) -> SimParams:
         max(cfg.n_keys, 1), cfg.zipf_theta)
     return SimParams(
         slo=slo,
+        pol_id=jnp.int32(POLICIES[cfg.policy]),
         w_big=jnp.float32(cfg.w_big),
         prop_n=jnp.int32(cfg.prop_n),
         n_active=jnp.int32(cfg.n_cores if n_active is None else n_active),
         seed=jnp.int32(seed) if not hasattr(seed, "dtype")
         else seed.astype(jnp.int32),
+        horizon=jnp.int32(_ticks(cfg.sim_time_us)),
         long_prob=jnp.float32(cfg.long_epoch_prob),
         long_scale=jnp.float32(cfg.long_epoch_scale),
         wakeup=jnp.int32(_ticks(cfg.wakeup_us)),
@@ -644,11 +732,14 @@ def _init_state(cfg: SimConfig, tb: SimTables, pm: SimParams,
         cur_lock0 = jax.vmap(lambda c: wlk.epoch_lock(
             pm.seed, c, 0, pm.ks_keys, pm.ks_theta, pm.ks_zeta,
             pm.ks_eta, pm.ks_alpha, pm.ks_locks))(cores)
-        if policies.get(cfg.policy).uses_rw:
-            cur_rw0 = jax.vmap(
-                lambda c: wlk.epoch_rw_u(pm.seed, c, 0))(cores)
-        else:
+        gate = _rw_draw_gate(cfg, pm)
+        if gate is False:
             cur_rw0 = jnp.ones(n, jnp.float32)
+        else:
+            draws = jax.vmap(
+                lambda c: wlk.epoch_rw_u(pm.seed, c, 0))(cores)
+            cur_rw0 = draws if gate is True else \
+                jnp.where(gate, draws, jnp.ones(n, jnp.float32))
     else:
         cur_lock0 = jnp.zeros(n, jnp.int32)
         cur_rw0 = jnp.ones(n, jnp.float32)
@@ -679,7 +770,7 @@ def _init_state(cfg: SimConfig, tb: SimTables, pm: SimParams,
         energy=jnp.zeros(n, jnp.float32),
         cur_lock=cur_lock0,
         cur_rw=cur_rw0,
-        pol=policies.get(cfg.policy).init_state(cfg, tb, pm),
+        pol=_active_policy(cfg).init_state(cfg, tb, pm),
     )
 
 
@@ -755,7 +846,7 @@ def _handle_acquire(st: SimState, cfg: SimConfig, tb: SimTables,
         cond = jnp.logical_and(cond, jnp.logical_not(off))
     st = st._replace(attempt_t=st.attempt_t.at[c].set(
         jnp.where(cond, t, st.attempt_t[c])))
-    return policies.get(cfg.policy).on_acquire(st, cfg, tb, pm, c, t, cond)
+    return _active_policy(cfg).on_acquire(st, cfg, tb, pm, c, t, cond)
 
 
 def _record(buf, cnt, c, value, cond):
@@ -798,10 +889,11 @@ def _handle_arrival(st: SimState, cfg: SimConfig, tb: SimTables,
                             pm.ks_locks)
         st = st._replace(cur_lock=st.cur_lock.at[c].set(
             jnp.where(cond, lk, st.cur_lock[c])))
-        if policies.get(cfg.policy).uses_rw:
+        gate = _rw_draw_gate(cfg, pm)
+        if gate is not False:
             rw = wlk.epoch_rw_u(pm.seed, c, ep)
             st = st._replace(cur_rw=st.cur_rw.at[c].set(
-                jnp.where(cond, rw, st.cur_rw[c])))
+                jnp.where(_and_gate(cond, gate), rw, st.cur_rw[c])))
     return st._replace(
         arr_t=st.arr_t.at[c].set(jnp.where(cond, nxt, st.arr_t[c])),
         wl_on=st.wl_on.at[c].set(jnp.where(cond, on, st.wl_on[c])),
@@ -814,7 +906,7 @@ def _handle_arrival(st: SimState, cfg: SimConfig, tb: SimTables,
 
 def _handle_release(st: SimState, cfg: SimConfig, tb: SimTables,
                     pm: SimParams, c, t, cond) -> SimState:
-    pol = policies.get(cfg.policy)
+    pol = _active_policy(cfg)
     s = st.seg[c]
     l = _lock_of(st, cfg, tb, c)    # key-drawn lock when _ks_on, else
     n_seg = len(cfg.seg_cs_us)      # the static segment program's
@@ -898,10 +990,11 @@ def _handle_release(st: SimState, cfg: SimConfig, tb: SimTables,
                             pm.ks_locks)
         st = st._replace(cur_lock=st.cur_lock.at[c].set(
             jnp.where(upd, lk, st.cur_lock[c])))
-        if pol.uses_rw:
+        gate = _rw_draw_gate(cfg, pm)
+        if gate is not False:
             rw = wlk.epoch_rw_u(pm.seed, c, ep)
             st = st._replace(cur_rw=st.cur_rw.at[c].set(
-                jnp.where(upd, rw, st.cur_rw[c])))
+                jnp.where(_and_gate(upd, gate), rw, st.cur_rw[c])))
 
     # Advance the program: next segment, or — epoch done — the closed-loop
     # think gap (inter-epoch + segment-0 noncrit), or the open-loop
@@ -943,7 +1036,7 @@ def _dispatch_table(cfg: SimConfig):
     phases a config cannot reach (STANDBY without ``uses_standby``,
     ARRIVAL without ``wl_open``) are simply absent, so their handlers
     never enter the compiled HLO."""
-    pol = policies.get(cfg.policy)
+    pol = _active_policy(cfg)
     table = [(NONCRIT, _handle_acquire), (HOLDER, _handle_release)]
     if pol.uses_standby:
         table.append((STANDBY, lambda st, cfg, tb, pm, c, t, cond:
@@ -1009,11 +1102,24 @@ def _step(cfg: SimConfig, tb: SimTables, pm: SimParams, horizon,
 def _simulate(cfg: SimConfig, tb: SimTables, pm: SimParams,
               windows0, masked: bool = False) -> SimState:
     st = _init_state(cfg, tb, pm, windows0)
-    horizon = jnp.int32(_ticks(cfg.sim_time_us))
+    horizon = pm.horizon
 
     def cond(s):
         return jnp.logical_and(jnp.min(s.t_ready) < horizon,
                                s.events < cfg.max_events)
+
+    if cfg.use_pallas:
+        # Fused path (repro.kernels.simstep): the whole chunk retires
+        # inside one Pallas kernel with the packed state VMEM-resident.
+        # Same _step closure -> bit-identical to the jnp body below.
+        from repro.kernels import simstep
+
+        def body(s):
+            return simstep.fused_chunk(
+                lambda t_, p_, s_: _step(cfg, t_, p_, horizon, s_, masked),
+                tb, pm, s, cfg.chunk)
+
+        return jax.lax.while_loop(cond, body, st)
 
     def body(s):
         def chunk_step(s, _):
@@ -1182,7 +1288,12 @@ def table_axes() -> tuple:
 
 
 def _sweepable() -> tuple:
-    return tuple(_PARAM_AXES) + table_axes() + ("window0_us",)
+    # "policy" is the merged-executable axis: string-valued, dispatched
+    # on the traced SimParams.pol_id (sweep() builds the policy_set).
+    # "sim_time_us" rides traced in SimParams.horizon — per-cell
+    # durations inside one executable (the step-utilization lever).
+    return tuple(_PARAM_AXES) + table_axes() + (
+        "window0_us", "policy", "sim_time_us")
 
 
 # Import-time snapshot for docs/introspection; sweep() itself recomputes.
@@ -1194,7 +1305,7 @@ def sweepable_axes(cfg: SimConfig) -> tuple:
     registered policy's declared ``sweep_axes``."""
     base = _sweepable()
     return base + tuple(
-        a for a in policies.get(cfg.policy).sweep_axes if a not in base)
+        a for a in _active_policy(cfg).sweep_axes if a not in base)
 
 
 def _cell_tables_cfg(cfg: SimConfig, cell: dict, table_keys) -> SimConfig:
@@ -1215,6 +1326,10 @@ def _cell_params(cfg: SimConfig, cell: dict, slo_us, seed) -> SimParams:
     pm = build_params(cfg, cell.get("slo_us", slo_us),
                       cell.get("seed", seed),
                       n_active=cell.get("n_cores", cfg.n_cores))
+    if "policy" in cell:
+        pm = pm._replace(pol_id=jnp.int32(POLICIES[cell["policy"]]))
+    if "sim_time_us" in cell:
+        pm = pm._replace(horizon=jnp.int32(_ticks(cell["sim_time_us"])))
     if "w_big" in cell:
         pm = pm._replace(w_big=jnp.float32(cell["w_big"]))
     if "prop_n" in cell:
@@ -1256,7 +1371,7 @@ def _cell_params(cfg: SimConfig, cell: dict, slo_us, seed) -> SimParams:
             aimd.unit_for(_ticks(cell["window0_us"]), cfg.pct)))
     # Policy-declared axes land in the traced SimParams.pol slots (the
     # built-in fields above are already covered by _PARAM_AXES).
-    for axis, slot in policies.get(cfg.policy).sweep_axes.items():
+    for axis, slot in _active_policy(cfg).sweep_axes.items():
         if axis in cell and slot in pm.pol:
             pm = pm._replace(pol=dict(pm.pol, **{
                 slot: jnp.asarray(cell[axis], pm.pol[slot].dtype)}))
@@ -1366,6 +1481,18 @@ def sweep(cfg: SimConfig, axes: dict, *, slo_us=1e9, seed=0,
     if resume_dir is not None and mesh is not None:
         raise ValueError("resume_dir does not compose with mesh-sharded "
                          "sweeps; run chunked-resumable sweeps unsharded")
+    # A "policy" axis merges its values into ONE multi-policy
+    # executable: the template grows a ``policy_set`` (jit-static — it
+    # fixes the handler union compiled into the HLO) while each cell's
+    # member id rides traced in ``SimParams.pol_id``.  This must happen
+    # before ``sweepable_axes`` so member-declared axes (e.g.
+    # ``shfl_bound``) validate against the whole set.
+    if "policy" in axes:
+        if not axes["policy"]:
+            raise ValueError("policy axis needs at least one name")
+        pset = tuple(dict.fromkeys(
+            tuple(cfg.policy_set) + tuple(axes["policy"])))
+        cfg = dataclasses.replace(cfg, policy_set=pset, policy=pset[0])
     allowed = sweepable_axes(cfg)
     for name in axes:
         if name not in allowed:

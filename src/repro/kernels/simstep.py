@@ -1,0 +1,121 @@
+"""Pallas kernel for the simulator's fused masked step.
+
+One :func:`fused_chunk` call retires a whole ``cfg.chunk`` of events
+inside a single ``pl.pallas_call``: the traced pytrees (``SimTables``,
+``SimParams``, ``SimState``) are *packed* — leaves grouped by
+(dtype, shape) and stacked into a few i32/f32/u32 vectors — handed to
+the kernel as whole-array VMEM refs, unpacked back into pytrees inside
+the kernel, and the per-event step (argmin over the event clock +
+masked scatter/gather handler updates) runs as an in-kernel
+``lax.scan``.  On a TPU the whole hot state is then VMEM-resident for
+the duration of the chunk instead of bouncing per-op through HBM.
+
+The step callable itself is the engine's ``simlock._step`` closure —
+the kernel adds no semantics of its own, so results are bit-identical
+to the plain jnp lowering (``tests/test_fused.py`` asserts exact
+equality across every registered policy).  On this CPU container the
+kernel executes in ``interpret=True`` mode (the body runs as traced
+XLA ops — correctness only); set env ``REPRO_PALLAS_COMPILE=1`` on a
+real TPU to compile it to Mosaic, exactly like ``repro.kernels.ops``.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+def _group(leaves) -> dict:
+    """Leaf indices grouped by (dtype, shape) — the packing layout.
+    Insertion-ordered, so pack/unpack agree across call and kernel."""
+    groups: dict = {}
+    for i, x in enumerate(leaves):
+        key = (jnp.dtype(x.dtype).name, tuple(jnp.shape(x)))
+        groups.setdefault(key, []).append(i)
+    return groups
+
+
+def _pack(leaves, groups):
+    return [jnp.stack([leaves[i] for i in idx]) for idx in groups.values()]
+
+
+def _unpack_refs(refs, groups, n_leaves):
+    """Read each packed ref back into per-leaf arrays (ref[j] is a
+    load, so after this the kernel computes on values, not refs)."""
+    out = [None] * n_leaves
+    for r, idx in zip(refs, groups.values()):
+        for j, i in enumerate(idx):
+            out[i] = r[j]
+    return out
+
+
+def _unpack_arrays(arrs, groups, n_leaves):
+    out = [None] * n_leaves
+    for a, idx in zip(arrs, groups.values()):
+        for j, i in enumerate(idx):
+            out[i] = a[j]
+    return out
+
+
+def fused_chunk(step, tb, pm, st, chunk: int, *, interpret=None):
+    """Advance ``st`` by ``chunk`` events of ``step`` in one kernel.
+
+    ``step(tb, pm, st) -> st`` must be shape-preserving and already
+    horizon-guarded (the engine's live-guard retires past-horizon
+    steps as no-ops, which is what makes a fixed-size chunk safe).
+    ``interpret=None`` follows the module :data:`INTERPRET` switch.
+    """
+    if interpret is None:
+        interpret = INTERPRET
+    # Pallas kernels may not close over constant arrays (e.g. the
+    # engine's horizon scalar — jax.closure_convert would leave such
+    # integer consts baked in): trace the step to a jaxpr and hoist
+    # ALL its consts into explicit inputs, packed with the read-only
+    # tree.
+    closed = jax.make_jaxpr(step)(tb, pm, st)
+    consts = tuple(closed.consts)
+    out_def = jax.tree_util.tree_structure(st)
+
+    def step_c(tb_, pm_, st_, consts_):
+        flat = jax.tree_util.tree_leaves((tb_, pm_, st_))
+        out = jax.core.eval_jaxpr(closed.jaxpr, list(consts_), *flat)
+        return jax.tree_util.tree_unflatten(out_def, out)
+
+    ro_leaves, ro_def = jax.tree_util.tree_flatten((tb, pm, consts))
+    st_leaves, st_def = jax.tree_util.tree_flatten(st)
+    ro_groups = _group(ro_leaves)
+    st_groups = _group(st_leaves)
+    ro_packed = _pack(ro_leaves, ro_groups)
+    st_packed = _pack(st_leaves, st_groups)
+    n_ro, n_st = len(ro_packed), len(st_packed)
+
+    def kernel(*refs):
+        ro_refs = refs[:n_ro]
+        st_refs = refs[n_ro:n_ro + n_st]
+        out_refs = refs[n_ro + n_st:]
+        tb_k, pm_k, consts_k = jax.tree_util.tree_unflatten(
+            ro_def, _unpack_refs(ro_refs, ro_groups, len(ro_leaves)))
+        st_k = jax.tree_util.tree_unflatten(
+            st_def, _unpack_refs(st_refs, st_groups, len(st_leaves)))
+
+        def body(s, _):
+            return step_c(tb_k, pm_k, s, consts_k), None
+
+        st_out = jax.lax.scan(body, st_k, None, length=max(chunk, 1))[0]
+        out_leaves = jax.tree_util.tree_leaves(st_out)
+        for r, idx in zip(out_refs, st_groups.values()):
+            r[...] = jnp.stack([out_leaves[i] for i in idx])
+
+    outs = pl.pallas_call(
+        kernel,
+        out_shape=[jax.ShapeDtypeStruct(x.shape, x.dtype)
+                   for x in st_packed],
+        interpret=interpret,
+    )(*ro_packed, *st_packed)
+    return jax.tree_util.tree_unflatten(
+        st_def, _unpack_arrays(outs, st_groups, len(st_leaves)))

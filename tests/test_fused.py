@@ -1,0 +1,205 @@
+"""Fused device event loop tests (docs/simulator.md §Fused step kernel
+& multi-policy executables):
+
+* Pallas masked-step kernel (``repro/kernels/simstep.py``, interpret
+  mode on CPU) — exact bit-parity vs the jnp reference across every
+  registered policy for single runs, batched sweeps and open-loop
+  workloads, plus chunk-size invariance;
+* merged multi-policy executable (``cfg.policy_set``) — golden-digest
+  parity per member against ``tests/data/keyshard_golden.json``, the
+  one-executable discipline, config validation, and the 1e4-cell batch
+  capacity probe.
+"""
+
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+import golden_digests as gd
+from repro.core import simlock as sl
+from repro.core.policies import REGISTRY
+
+GOLDEN = json.loads(gd.GOLDEN.read_text())
+
+
+def _assert_states_equal(a, b, ctx=""):
+    fa, fb = a._asdict(), b._asdict()
+    assert sorted(fa) == sorted(fb)
+    for name in fa:
+        if name == "pol":
+            for k in fa[name]:
+                np.testing.assert_array_equal(
+                    np.asarray(fa[name][k]), np.asarray(fb[name][k]),
+                    f"{ctx}pol.{k}")
+        else:
+            np.testing.assert_array_equal(
+                np.asarray(fa[name]), np.asarray(fb[name]),
+                f"{ctx}{name}")
+
+
+def _pallas(cfg):
+    return dataclasses.replace(cfg, use_pallas=True)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel bit-parity (interpret mode on this CPU container)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", sorted(REGISTRY))
+def test_pallas_single_parity(policy):
+    """use_pallas=True is bit-identical to the jnp lowering for a single
+    run of every registered policy — the kernel evaluates the engine's
+    own _step jaxpr, so ANY divergence is a packing/unpacking bug."""
+    cfg = sl.SimConfig(policy=policy, sim_time_us=gd.SIM_US)
+    _assert_states_equal(sl.run(cfg, gd.SLO_US, seed=gd.SEED),
+                         sl.run(_pallas(cfg), gd.SLO_US, seed=gd.SEED),
+                         f"{policy}/")
+
+
+@pytest.mark.parametrize("policy", ["fifo", "libasl", "ks_crew"])
+def test_pallas_sweep_parity(policy):
+    """The vmapped (masked-step) lowering of the kernel matches the jnp
+    sweep bit-for-bit on the golden sweep shape."""
+    cfg = sl.SimConfig(policy=policy, sim_time_us=gd.SIM_US)
+    a, _ = sl.sweep(cfg, dict(gd.SWEEP_AXES), slo_us=gd.SLO_US,
+                    seed=gd.SEED)
+    b, _ = sl.sweep(_pallas(cfg), dict(gd.SWEEP_AXES), slo_us=gd.SLO_US,
+                    seed=gd.SEED)
+    _assert_states_equal(a, b, f"{policy}/sweep/")
+
+
+@pytest.mark.parametrize("policy", ["fifo", "shfl"])
+def test_pallas_openloop_parity(policy):
+    """Open-loop workloads add the ARRIVAL handler to the dispatch
+    table — the kernel must retire that path bit-identically too."""
+    cfg = sl.SimConfig(policy=policy, wl=True, wl_open=True,
+                       wl_process="poisson", wl_rate=0.8,
+                       sim_time_us=gd.SIM_US)
+    _assert_states_equal(sl.run(cfg, gd.SLO_US, seed=gd.SEED),
+                         sl.run(_pallas(cfg), gd.SLO_US, seed=gd.SEED),
+                         f"{policy}/open/")
+
+
+def test_pallas_chunk_invariance():
+    """The live-guard makes a fixed-size chunk safe: different chunk
+    sizes retire different partial tails but identical final states —
+    on the Pallas path exactly as on the jnp path."""
+    base = sl.SimConfig(policy="libasl", sim_time_us=gd.SIM_US,
+                        use_pallas=True)
+    ref = sl.run(base, gd.SLO_US, seed=gd.SEED)
+    for chunk in (32, 128):
+        got = sl.run(dataclasses.replace(base, chunk=chunk),
+                     gd.SLO_US, seed=gd.SEED)
+        _assert_states_equal(ref, got, f"chunk{chunk}/")
+
+
+def test_pallas_digest_parity_sample():
+    """Spot-check the Pallas path against the PRE-refactor golden
+    digests directly (not just the current jnp path)."""
+    for policy in ("fifo", "dvfs_race"):
+        cfg = sl.SimConfig(policy=policy, sim_time_us=gd.SIM_US,
+                           use_pallas=True)
+        dig = gd.digest_state(sl.run(cfg, gd.SLO_US, seed=gd.SEED))
+        for field, h in GOLDEN[policy]["single"].items():
+            assert dig.get(field) == h, (policy, field)
+
+
+# ---------------------------------------------------------------------------
+# Merged multi-policy executable
+# ---------------------------------------------------------------------------
+
+def test_merged_golden_digest_parity():
+    """ONE merged executable over the whole registry reproduces every
+    policy's golden sweep digests bit-for-bit: the policy axis rides
+    product-major, so cells [4i:4i+4] are policy i's golden sweep grid
+    in the golden capture's own cell order."""
+    names = sorted(GOLDEN)
+    cfg = sl.SimConfig(policy=names[0], policy_set=tuple(names),
+                       sim_time_us=gd.SIM_US)
+    axes = {"policy": names}
+    axes.update(gd.SWEEP_AXES)
+    n0 = sl.n_batch_executables()
+    st, _ = sl.sweep(cfg, axes, slo_us=gd.SLO_US, seed=gd.SEED)
+    assert sl.n_batch_executables() - n0 <= 1
+    per = 1
+    for v in gd.SWEEP_AXES.values():
+        per *= len(v)
+    for i, name in enumerate(names):
+        cell = jax.tree.map(lambda x, i=i: x[i * per:(i + 1) * per], st)
+        dig = gd.digest_state(cell)
+        for field, h in GOLDEN[name]["sweep"].items():
+            assert dig.get(field) == h, (name, field)
+
+
+def test_merged_policy_set_validation():
+    with pytest.raises(ValueError, match="policy_set"):
+        sl.SimConfig(policy="fifo", policy_set=("fifo", "nope"))
+    with pytest.raises(ValueError, match="policy_set"):
+        sl.SimConfig(policy="fifo", policy_set=("fifo", "fifo"))
+    with pytest.raises(ValueError, match="policy_set"):
+        sl.SimConfig(policy="edf", policy_set=("fifo", "tas"))
+    with pytest.raises(ValueError, match="policy"):
+        sl.sweep(sl.SimConfig(policy="fifo", sim_time_us=500.0),
+                 {"policy": []})
+
+
+def test_merged_policy_sweep_matches_singles():
+    """Each cell of a merged policy x slo sweep is bit-identical to the
+    same cell from the policy's OWN single-policy executable (the
+    fully-conditional-handler contract, end to end)."""
+    names = ("fifo", "tas", "libasl", "ks_crew")
+    cfg = sl.SimConfig(policy="fifo", policy_set=names,
+                       sim_time_us=2_000.0)
+    axes = {"policy": [], "slo_us": []}
+    for n in names:
+        for s in (40.0, 90.0):
+            axes["policy"].append(n)
+            axes["slo_us"].append(s)
+    st, _ = sl.sweep(cfg, axes, product=False, seed=gd.SEED)
+    i = 0
+    for n in names:
+        one = sl.SimConfig(policy=n, sim_time_us=2_000.0)
+        for s in (40.0, 90.0):
+            want, _ = sl.sweep(one, {"slo_us": [s]}, seed=gd.SEED)
+            cell = jax.tree.map(lambda x, i=i: x[i:i + 1], st)
+            for f in ("t", "events", "phase", "t_ready", "ep_cnt",
+                      "cs_cnt", "ep_lat", "window", "cur_rw"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(want, f)),
+                    np.asarray(getattr(cell, f)), (n, s, f))
+            i += 1
+
+
+def test_merged_batch_capacity_1e4_cells():
+    """1e4+ cells in ONE merged executable: 4 policies x 2500 seeds with
+    a small latency ring.  Every lane must retire events."""
+    names = ("fifo", "tas", "prop", "libasl")
+    cfg = sl.SimConfig(policy="fifo", policy_set=names, epcap=64,
+                       sim_time_us=60.0)
+    axes = {"policy": [], "seed": []}
+    for n in names:
+        for s in range(2500):
+            axes["policy"].append(n)
+            axes["seed"].append(s)
+    n0 = sl.n_batch_executables()
+    st, _ = sl.sweep(cfg, axes, slo_us=gd.SLO_US, product=False)
+    assert sl.n_batch_executables() - n0 <= 1
+    ev = np.asarray(st.events)
+    assert ev.shape == (10_000,)
+    assert (ev > 0).all()
+
+
+def test_horizon_axis_matches_config():
+    """A swept sim_time_us cell is bit-identical to a single run whose
+    config carries that horizon (the traced-horizon plumbing)."""
+    cfg = sl.SimConfig(policy="libasl", sim_time_us=4_000.0)
+    st, _ = sl.sweep(cfg, {"sim_time_us": [1_000.0, 4_000.0]},
+                     slo_us=gd.SLO_US, seed=gd.SEED)
+    for i, t in enumerate((1_000.0, 4_000.0)):
+        single = sl.run(dataclasses.replace(cfg, sim_time_us=t),
+                        gd.SLO_US, seed=gd.SEED)
+        cell = jax.tree.map(lambda x, i=i: x[i], st)
+        _assert_states_equal(single, cell, f"T{t}/")
