@@ -23,9 +23,14 @@ Conventions (SPMD modules carry per-partition shapes):
   traffic with ring factors applied.
 Terms (seconds, per device == per step on the critical path):
     compute   = flops / 197e12        (bf16 peak per v5e chip)
-    memory    = bytes / 819e9         (HBM bw; HLO bytes-accessed is an
-                                       upper-ish proxy — fused ops re-count)
-    collective= link_bytes / 50e9     (per-link ICI)
+    memory    = bytes / 819e9         (closed-form per-device HBM traffic:
+                                       analytic_hbm_bytes sharded by the
+                                       cell's Rules — weights/TP, cache/
+                                       (batch x heads), acts/data; the
+                                       HLO bytes-accessed alternative
+                                       re-counts fused traffic and is
+                                       recorded alongside in the JSON)
+    collective= link_bytes / 50e9     (per-link ICI, ring factors applied)
 
 Known caveat (documented in EXPERIMENTS.md): the two recurrent archs keep a
 time-step scan in the HLO even in analysis mode; their compute/memory terms
@@ -46,7 +51,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import registry
 from repro.dist.hlo_analysis import (analytic_hbm_bytes,
-                                     analytic_model_flops, collective_stats)
+                                     analytic_model_flops, collective_stats,
+                                     xla_cost)
 from repro.dist.sharding import build_rules, use_mesh
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import batch_specs, decode_specs
@@ -126,8 +132,9 @@ def _measure(cfg, shape, mesh, *, microbatches=1):
                           donate_argnums=(3,))
             args = (aparams, tokens, lengths, acache)
         compiled = jfn.lower(*args).compile()
-        cost = compiled.cost_analysis()
-        coll = collective_stats(compiled.as_text())
+        cost = xla_cost(compiled)
+        coll = collective_stats(compiled.as_text(),
+                                int(np.prod(mesh.devices.shape)))
     return {"flops": float(cost.get("flops", 0.0)),
             "bytes": float(cost.get("bytes accessed", 0.0)),
             "link_bytes": coll["total"]["link_bytes"],
@@ -177,7 +184,11 @@ def analyze_cell(arch: str, shape_name: str, force=False) -> dict:
         if arch in _SCAN_TIME_ARCHS:
             # time-scan body counted once: take the analytic per-device value
             hlo_flops = model_flops / n_dev
-        hbm_bytes = analytic_hbm_bytes(cfg, shape)
+        rules = build_rules(mesh, kv_heads=cfg.n_kv_heads,
+                            n_experts=cfg.n_experts, step=shape.kind,
+                            seq_parallel=cfg.seq_parallel,
+                            expert_parallel=cfg.expert_parallel)
+        hbm_bytes = analytic_hbm_bytes(cfg, shape, rules)
         t_compute = hlo_flops / PEAK_FLOPS
         t_memory = hbm_bytes / HBM_BW
         t_coll = totals["link_bytes"] / LINK_BW

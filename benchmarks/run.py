@@ -701,9 +701,18 @@ def main(argv=None) -> None:
         _roofline_section(results)
     if "chaos" in sections:
         chaos_ok = _chaos_section(results, args.quick)
-    (ART / "results.json").write_text(json.dumps(results, indent=1,
-                                                 default=str))
-    print(f"# wrote {ART / 'results.json'}")
+    # Merge into the existing file: a partial --section run must not
+    # wipe the other sections' committed rows.
+    out = ART / "results.json"
+    if out.exists():
+        try:
+            prev = json.loads(out.read_text())
+        except ValueError:
+            prev = {}
+        prev.update(results)
+        results = prev
+    out.write_text(json.dumps(results, indent=1, default=str))
+    print(f"# wrote {out} ({len(results)} entries)")
     if not (sim_ok and serving_ok and chaos_ok):
         raise SystemExit(1)
 

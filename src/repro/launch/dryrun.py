@@ -190,7 +190,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
             v = getattr(mem, f, None)
             if v is not None:
                 mem_d[f] = int(v)
-        coll = collective_stats(compiled.as_text())
+        coll = collective_stats(compiled.as_text(), n_dev)
         if save_hlo:
             (ARTIFACTS / f"{cell_id}.hlo.txt").write_text(compiled.as_text())
         rec.update(
