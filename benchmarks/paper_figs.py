@@ -682,6 +682,54 @@ def keyshard(n_keys=4096, n_locks=16):
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Excess tail beyond the SLO vs offered load — the streaming-histogram
+# figure (docs/simulator.md §Streaming metrics).  P99/P999 come from the
+# constant-memory on-device histograms (cfg.hist), so the tail covers the
+# FULL run history even where the per-core sample rings wrapped; each row
+# records how far the percentile overshoots the SLO
+# (``excess_p99 = max(0, P99/SLO - 1)``).  The whole policy x load grid
+# is ONE merged multi-policy executable (cfg.policy_set), matching the
+# loadlat figures' protocol.
+# ---------------------------------------------------------------------------
+
+EXCESS_TAIL_SLO = 200.0
+
+
+def excess_tail(slo=EXCESS_TAIL_SLO):
+    from benchmarks.serving_bench import LOAD_FRACS
+    fracs = tuple(LOAD_FRACS) + (1.5,)     # one saturated point: the knee
+    rates = [_loadlat_rate(f) for f in fracs]
+    specs = (("fifo", 1.0, 1e9), ("tas", 8.0, 1e9), ("libasl", 1.0, slo))
+    cfg = _cfg("fifo", 8, sim_time_us=40_000.0, wl=True,
+               wl_process="poisson", wl_service="lognormal", wl_cv=1.0,
+               hist=True, policy_set=tuple(p for p, _, _ in specs))
+    axes = {"policy": [], "arrival_rate": [], "w_big": [], "slo_us": []}
+    for pol, w_big, slo_us in specs:
+        for r in rates:
+            axes["policy"].append(pol)
+            axes["arrival_rate"].append(r)
+            axes["w_big"].append(w_big)
+            axes["slo_us"].append(slo_us)
+
+    def _extra(c, s):
+        p99, p999 = s["ep_p99_hist_all_us"], s["ep_p999_hist_all_us"]
+        return dict(
+            load_frac=fracs[rates.index(c["arrival_rate"])],
+            slo_us=slo,
+            ep_p99_hist_us=p99, ep_p999_hist_us=p999,
+            excess_p99=max(0.0, p99 / slo - 1.0),
+            excess_p999=max(0.0, p999 / slo - 1.0),
+            hist_rel_err_bound=s["hist_rel_err_bound"],
+            tail_truncated=bool(s.get("tail_truncated", False)))
+
+    return _sweep_rows(
+        cfg, axes,
+        lambda c: (f"excess/{c['policy']}/"
+                   f"f{fracs[rates.index(c['arrival_rate'])]:.2f}"),
+        product=False, extra=_extra)
+
+
 ALL = {
     "fig1_collapse": fig1_collapse,
     "fig4_big_affinity": fig4_big_affinity,
@@ -698,4 +746,5 @@ ALL = {
     "chaos_collapse": chaos_collapse,
     "energy_efficiency": energy_efficiency,
     "keyshard": keyshard,
+    "excess_tail": excess_tail,
 }

@@ -197,6 +197,12 @@ def _headline(name, rows) -> str:
                     f"{hot['jbsq']['tput'] / hot['crcw']['tput']:.2f}x;"
                     f"crcw_th1.2_vs_uniform="
                     f"{th[1.2]['tput'] / th[0.0]['tput']:.2f}x")
+        if name == "excess_tail":
+            hi = max(r["load_frac"] for r in rows)
+            h = {r["policy"]: r for r in rows if r["load_frac"] == hi}
+            return (f"sat:fifo_excess_p999={h['fifo']['excess_p999']:.1f}x"
+                    f"_vs_libasl={h['libasl']['excess_p999']:.1f}x;"
+                    f"bound={h['fifo']['hist_rel_err_bound']:.1%}")
         if name == "straggler_training":
             by = {r["name"].split("/")[-1]: r for r in rows}
             return (f"asl_vs_sync={by['asl-staleness']['steps_per_s'] / by['sync']['steps_per_s']:.2f}x;"
@@ -374,6 +380,59 @@ def _keyshard_probe(results) -> bool:
     return ok
 
 
+def _hist_tail_probe(results) -> bool:
+    """CI probe for the constant-memory streaming-histogram tail
+    metrics (docs/simulator.md §Streaming metrics).  On a tiny
+    un-wrapped grid:
+
+    * the histogram P99 must land within the documented one-bucket
+      relative-error bound of the exact ring-buffer percentile;
+    * the hist-on sweep may compile at most ONE new executable;
+    * gate-off purity — every state leaf the two runs share must be
+      bitwise identical (the static gate adds the histogram leaves, it
+      never perturbs the event trajectory)."""
+    import dataclasses
+
+    import numpy as np
+
+    from repro.core import simlock as sl
+
+    cfg_off = sl.SimConfig(policy="libasl", sim_time_us=3_000.0)
+    cfg_on = dataclasses.replace(cfg_off, hist=True)
+    st_off, _ = sl.sweep(cfg_off, {"seed": [3]}, slo_us=60.0)
+    n0 = sl.n_batch_executables()
+    st_on, grid = sl.sweep(cfg_on, {"seed": [3]}, slo_us=60.0)
+    execs = sl.n_batch_executables() - n0
+
+    import jax
+
+    def _eq(a, b):
+        xs, ys = jax.tree.leaves(a), jax.tree.leaves(b)
+        return len(xs) == len(ys) and all(
+            np.array_equal(np.asarray(x), np.asarray(y))
+            for x, y in zip(xs, ys))
+
+    pure = all(
+        _eq(getattr(st_on, f), getattr(st_off, f))
+        for f in st_on._fields if f not in ("ep_hist", "cs_hist"))
+    s = sl.sweep_summaries(cfg_on, st_on, grid, slo_us=60.0)[0]
+    exact = s["ep_p99_all_us"]          # un-wrapped: the ring is exact
+    est = s["ep_p99_hist_all_us"]
+    bound = s["hist_rel_err_bound"]
+    err = abs(est - exact) / max(exact, 1e-9)
+    wrapped = bool(s.get("tail_truncated", False))
+    ok = bool(err <= bound and pure and execs <= 1 and not wrapped)
+    results["sim/hist_tail"] = {
+        "p99_exact_us": exact, "p99_hist_us": est,
+        "rel_err": err, "bound": bound, "gate_off_pure": bool(pure),
+        "new_executables": int(execs), "wrapped": wrapped, "pass": ok}
+    _emit("sim/hist_tail", 0.0,
+          f"p99:hist={est:.1f}us_vs_exact={exact:.1f}us"
+          f"(err={err:.2%}<={bound:.2%});pure={pure};"
+          f"execs={execs}(<=1);" + ("PASS" if ok else "FAIL"))
+    return ok
+
+
 # Device events/s floors for the two open-loop figures: >= ~5x the
 # pre-merge BENCH_simlock.json entries (openloop_loadlat 17609 ev/s,
 # loadlat_sweep 19057 ev/s — the per-policy executables before the
@@ -483,6 +542,7 @@ def _sim_section(results, quick: bool) -> bool:
     gate = _energy_probe(results) and gate
     gate = _keyshard_probe(results) and gate
     gate = _merged_exec_probe(results) and gate
+    gate = _hist_tail_probe(results) and gate
     gate = _openloop_floor_gate(results) and gate
 
     if len(jax.devices()) < 2:

@@ -230,6 +230,15 @@ def main():
     if not args.skip_figures:
         print("== per-figure wall clock ==", flush=True)
         rec["figures"] = bench_figures(args.quick, figs)
+        if figs and OUT.exists():
+            # A subset recording must not drop the other figures'
+            # committed entries: merge into the existing protocol file.
+            try:
+                prev = json.loads(OUT.read_text()).get("figures", {})
+            except ValueError:
+                prev = {}
+            prev.update(rec["figures"])
+            rec["figures"] = prev
 
     OUT.write_text(json.dumps(rec, indent=1))
     print(f"# wrote {OUT}")

@@ -83,6 +83,15 @@ class ColumnSpec:
         enc = tuple(self.encode(v) for v in raw) if self.encode else raw
         return (enc + (self.default,) * n)[:n]
 
+    def np_values(self, cfg, n: int):
+        """:meth:`host_values` as a numpy array for host-side metric
+        paths (e.g. ``simlock.summarize``'s per-core SLO scaling) —
+        float64/int64, NOT the traced dtype: host metrics keep full
+        precision so padding a column can never move a summary bit."""
+        import numpy as np
+        return np.asarray(self.host_values(cfg, n),
+                          float if self.dtype == "f32" else np.int64)
+
 
 def register_column(spec: ColumnSpec) -> ColumnSpec:
     """Register a column spec (append-only; duplicate names rejected)."""

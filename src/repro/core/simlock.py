@@ -77,6 +77,7 @@ from repro.core import columns as colreg
 from repro.core import energy as _energy  # registers the DVFS/power columns
 from repro.dist.hlo_analysis import executable_stats
 from repro.core.policies.base import lock_of as _lock_of
+from repro.core import stats
 from repro.faults import model as flt
 from repro.workloads import generators as wlg
 from repro.workloads import keys as wlk
@@ -140,6 +141,13 @@ def _validate_config(cfg) -> None:
                  "prop_n"):
         chk(name, 1)
     chk("n_keys", 0)
+    chk("hist_buckets", 4)
+    chk("hist_lo_us", 0.0, lo_open=True)
+    chk("hist_warmup", 0)
+    if not cfg.hist_hi_us > cfg.hist_lo_us:
+        raise ValueError(
+            f"SimConfig.hist_hi_us must be > hist_lo_us, got "
+            f"hi={cfg.hist_hi_us!r} lo={cfg.hist_lo_us!r}")
     import math
     if not math.isfinite(cfg.zipf_theta) or cfg.zipf_theta < 0.0:
         raise ValueError("SimConfig.zipf_theta must be finite and >= 0, "
@@ -248,6 +256,22 @@ class SimConfig:
     max_window_us: float = 100_000.0   # 100 ms upper bound (starvation-free)
     sim_time_us: float = 100_000.0
     epcap: int = 8192             # latency ring size
+    # Constant-memory streaming tail metrics (docs/simulator.md
+    # §Streaming metrics).  ``hist`` is the single jit-static on/off bit:
+    # when set, every epoch/CS latency sample is also scatter-added into
+    # fixed-size log-bucketed ``u32[N, hist_buckets]`` histograms
+    # (``SimState.ep_hist`` / ``cs_hist``), so tail percentiles stay
+    # bounded-error at ANY run length — the ``f32[N, epcap]`` rings
+    # silently overwrite history once a core retires > epcap samples.
+    # ``hist_buckets`` is shape-static (like ``epcap``); the bucket
+    # range [hist_lo_us, hist_hi_us) and the warmup cutoff ride traced
+    # (SimTables / SimParams), so gate-off runs are bit-identical to
+    # pre-histogram builds and bucket-range variants share executables.
+    hist: bool = False
+    hist_buckets: int = 512
+    hist_lo_us: float = 0.1
+    hist_hi_us: float = 1e6
+    hist_warmup: int = 32         # samples/core skipped (match summarize)
     max_events: int = 5_000_000
     # Bench-3: heterogeneous epochs — with prob p the next epoch's
     # non-critical work is scale x longer (long request mixed with short).
@@ -355,6 +379,12 @@ class SimTables(NamedTuple):
     nc_dur: jnp.ndarray    # i32[N,S] non-CS ticks per (core, segment)
     inter: jnp.ndarray     # i32[N] inter-epoch ticks per core
     seg_lock: jnp.ndarray  # i32[S] lock id per segment
+    # Streaming-histogram bucket layout (repro.core.stats.layout), the
+    # host-precomputed log-spaced edge parameterization: log2 of the
+    # lowest finite edge (ticks) and 1/log2 of the bucket growth factor.
+    # Traced scalars — dead code unless ``cfg.hist`` (the static gate).
+    hist_log2_lo: jnp.ndarray   # f32 log2(hist_lo_us * US)
+    hist_inv_log2g: jnp.ndarray  # f32 1 / log2(g)
     # Registered per-core columns (repro.core.columns): every declared
     # ColumnSpec — the tenancy/fault/energy built-ins (slo_scale,
     # wl_service, ft_mask, dvfs, p_*) plus policy-owned ones — as
@@ -421,6 +451,11 @@ class SimParams(NamedTuple):
     ks_eta: jnp.ndarray      # f32 Gray/YCSB eta constant
     ks_alpha: jnp.ndarray    # f32 1/(1-theta)
     ks_locks: jnp.ndarray    # i32 active lock count (<= L padded)
+    # Streaming-histogram warmup: per-core sample index below which a
+    # sample is NOT bucketed (matches summarize's ring warmup, so ring
+    # and histogram quantiles agree on un-wrapped runs).  Traced; dead
+    # unless ``cfg.hist``.
+    hist_warmup: jnp.ndarray  # i32
     # Policy-owned traced knobs (LockPolicy.init_params; {} for the
     # built-in four) — swept via the policy's declared sweep_axes.
     pol: dict
@@ -457,6 +492,12 @@ class SimState(NamedTuple):
     #                           zero unless cfg.n_keys > 0 — _ks_on)
     cur_rw: jnp.ndarray       # f32[N] this epoch's read/write uniform
     #                           (CREW policies; 1.0 = read when unused)
+    # Constant-memory streaming latency histograms (cfg.hist gate):
+    # log-bucketed u32 counts per metric family, merged across cores /
+    # cells / shards / devices by plain summation.  Shape [N, 1] when
+    # the gate is off (the leaves exist but stay empty and untouched).
+    ep_hist: jnp.ndarray      # u32[N, B] epoch-latency counts
+    cs_hist: jnp.ndarray      # u32[N, B] acquire->release counts
     # Policy-owned state slots (LockPolicy.init_state; {} for policies
     # that need none — e.g. shfl's per-lock shuffle counter).
     pol: dict
@@ -509,6 +550,12 @@ def _canon(cfg: SimConfig) -> SimConfig:
         # exist in the HLO at all); the watt values ride in SimTables.
         p_cs=(0.0,) if _energy_on(cfg) else (),
         p_spin=(), p_park=(), p_idle=(),
+        # Streaming histograms: ``hist`` is the static gate and
+        # ``hist_buckets`` the static state shape (only meaningful when
+        # on — wiped to the default otherwise so gate-off configs share
+        # executables); the bucket range and warmup ride traced.
+        hist_buckets=cfg.hist_buckets if cfg.hist else 512,
+        hist_lo_us=1.0, hist_hi_us=2.0, hist_warmup=0,
         policy_kw=())
 
 
@@ -581,6 +628,11 @@ def build_tables(cfg: SimConfig) -> SimTables:
         spec.host_values(cfg, n),
         jnp.int32 if spec.dtype == "i32" else jnp.float32)
         for spec in colreg.COLUMNS.values()}
+    # Streaming-histogram edge parameterization, precomputed host-side
+    # in TICKS (the unit latency samples are recorded in).  Always
+    # materialized (two dead scalars when cfg.hist is off).
+    h_log2_lo, h_inv_log2g = stats.layout(
+        cfg.hist_lo_us * US, cfg.hist_hi_us * US, max(cfg.hist_buckets, 4))
     return SimTables(
         big=jnp.asarray(cfg.big[:n], jnp.int32),
         cs_dur=jnp.asarray(
@@ -593,6 +645,8 @@ def build_tables(cfg: SimConfig) -> SimTables:
             [_ticks(cfg.inter_epoch_us * cfg.speed_nc[c]) for c in range(n)],
             jnp.int32),
         seg_lock=jnp.asarray(cfg.seg_lock, jnp.int32),
+        hist_log2_lo=jnp.float32(h_log2_lo),
+        hist_inv_log2g=jnp.float32(h_inv_log2g),
         col=col)
 
 
@@ -675,6 +729,7 @@ def build_params(cfg: SimConfig, slo_us, seed=0, n_active=None) -> SimParams:
         ks_eta=jnp.float32(ks_eta),
         ks_alpha=jnp.float32(ks_alpha),
         ks_locks=jnp.int32(cfg.n_locks),
+        hist_warmup=jnp.int32(cfg.hist_warmup),
         pol=pol_params)
 
 
@@ -767,6 +822,10 @@ def _init_state(cfg: SimConfig, tb: SimTables, pm: SimParams,
         cs_cnt=jnp.zeros(n, jnp.int32),
         events=jnp.int32(0),
         arr_t=arr0,
+        ep_hist=jnp.zeros((n, cfg.hist_buckets if cfg.hist else 1),
+                          jnp.uint32),
+        cs_hist=jnp.zeros((n, cfg.hist_buckets if cfg.hist else 1),
+                          jnp.uint32),
         energy=jnp.zeros(n, jnp.float32),
         cur_lock=cur_lock0,
         cur_rw=cur_rw0,
@@ -856,6 +915,20 @@ def _record(buf, cnt, c, value, cond):
     return buf.at[c, pos].set(val), cnt.at[c].add(jnp.where(cond, 1, 0))
 
 
+def _hist_record(hist, tb: SimTables, c, value, cond):
+    """Scatter one latency sample (ticks) into core ``c``'s log-bucketed
+    histogram row: one log2, one clipped floor, one masked add — fully
+    conditional like every handler op (``cond`` False commits nothing).
+    Bucket layout lives in repro.core.stats; the two edge scalars are
+    host-precomputed in SimTables."""
+    nb = hist.shape[1]
+    lg = (jnp.log2(jnp.maximum(value, jnp.float32(1e-6)))
+          - tb.hist_log2_lo) * tb.hist_inv_log2g
+    idx = jnp.clip(1 + jnp.floor(lg).astype(jnp.int32), 0, nb - 1)
+    return hist.at[c, idx].add(
+        jnp.where(cond, jnp.uint32(1), jnp.uint32(0)))
+
+
 def _handle_arrival(st: SimState, cfg: SimConfig, tb: SimTables,
                     pm: SimParams, c, t, cond) -> SimState:
     """Open-loop mode (``wl_open``): the pending-ARRIVAL event fired.
@@ -912,16 +985,27 @@ def _handle_release(st: SimState, cfg: SimConfig, tb: SimTables,
     n_seg = len(cfg.seg_cs_us)      # the static segment program's
 
     # acquire->release latency (paper Figure 1 metric)
-    cs_lat, cs_cnt = _record(st.cs_lat, st.cs_cnt, c,
-                             (t - st.attempt_t[c]).astype(jnp.float32), cond)
+    cs_latency = (t - st.attempt_t[c]).astype(jnp.float32)
+    if cfg.hist:
+        # Streaming histogram (pre-increment count = this sample's
+        # index; gated on the traced warmup so histogram and ring
+        # quantiles agree on un-wrapped runs).
+        st = st._replace(cs_hist=_hist_record(
+            st.cs_hist, tb, c, cs_latency,
+            jnp.logical_and(cond, st.cs_cnt[c] >= pm.hist_warmup)))
+    cs_lat, cs_cnt = _record(st.cs_lat, st.cs_cnt, c, cs_latency, cond)
     st = st._replace(cs_lat=cs_lat, cs_cnt=cs_cnt)
 
     last = s == n_seg - 1
     # Epoch end: record latency; the policy runs its feedback (e.g.
     # LibASL's AIMD window update — little cores only).
     ep_latency = (t - st.epoch_start[c]).astype(jnp.float32)
-    ep_lat, ep_cnt = _record(st.ep_lat, st.ep_cnt, c, ep_latency,
-                             jnp.logical_and(last, cond))
+    ep_cond = jnp.logical_and(last, cond)
+    if cfg.hist:
+        st = st._replace(ep_hist=_hist_record(
+            st.ep_hist, tb, c, ep_latency,
+            jnp.logical_and(ep_cond, st.ep_cnt[c] >= pm.hist_warmup)))
+    ep_lat, ep_cnt = _record(st.ep_lat, st.ep_cnt, c, ep_latency, ep_cond)
     st = st._replace(ep_lat=ep_lat, ep_cnt=ep_cnt)
 
     st = pol.on_release(st, cfg, tb, pm, c, t, ep_latency, last, cond)
@@ -1643,11 +1727,88 @@ def sweep_summaries(cfg: SimConfig, st: SimState, grid: dict,
 # --------------------------------------------------------------------------
 
 def _ring_values(buf: np.ndarray, cnt: int, warmup: int = 32) -> np.ndarray:
+    """A core's recorded latency samples minus the first ``warmup``.
+
+    When ``cnt <= warmup`` the result is EMPTY — every sample is warmup
+    (the old ``min(warmup, cnt - 1)`` slice kept exactly one contaminated
+    sample).  When the ring wrapped (``cnt > cap``) it holds the most
+    recent ``cap`` samples in ring order: unroll oldest-first and trim
+    the warmup samples still present, i.e. the first
+    ``warmup - (cnt - cap)`` when the wrap hasn't yet evicted them all.
+    Order is oldest-to-newest either way (percentiles don't care; tests
+    do)."""
     cap = buf.shape[0]
     if cnt <= cap:
-        vals = buf[:cnt]
-        return vals[min(warmup, max(cnt - 1, 0)):]
-    return buf  # ring wrapped: holds the most recent `cap` samples
+        return buf[min(warmup, cnt):cnt]
+    pos = cnt % cap
+    vals = np.concatenate([buf[pos:], buf[:pos]])
+    return vals[max(0, warmup - (cnt - cap)):]
+
+
+def hist_tail(cfg: SimConfig, ep_hist, cs_hist, slo_us=None,
+              slo_scale=None, prefix: str = "hist_") -> dict:
+    """Tail metrics from per-core streaming histograms (``cfg.hist``).
+
+    ``ep_hist`` / ``cs_hist`` are ``[n, B]`` u32 count arrays (already
+    sliced to the active cores); merging across cores is a plain sum —
+    see repro.core.stats.  Returns p50/p99/p999 epoch and p99 CS
+    quantiles per core class in microseconds (each within the documented
+    ``sqrt(g) - 1`` relative-error bound of exact), plus the
+    histogram-side SLO-good fraction when ``slo_us`` is given."""
+    n = ep_hist.shape[0]
+    big = np.asarray(cfg.big[:n], bool)
+    lo_t, hi_t = cfg.hist_lo_us * US, cfg.hist_hi_us * US
+    out = {}
+    for name, mask in (("all", np.ones_like(big)), ("big", big),
+                       ("little", ~big)):
+        he = stats.merge(ep_hist[mask]) if mask.any() else \
+            np.zeros(ep_hist.shape[1], np.uint64)
+        hc = stats.merge(cs_hist[mask]) if mask.any() else \
+            np.zeros(cs_hist.shape[1], np.uint64)
+        for q, tag in ((50, "p50"), (99, "p99"), (99.9, "p999")):
+            out[f"ep_{tag}_{prefix}{name}_us"] = \
+                stats.quantile(he, q, lo_t, hi_t) / US
+        out[f"cs_p99_{prefix}{name}_us"] = \
+            stats.quantile(hc, 99, lo_t, hi_t) / US
+    out[f"{prefix}rel_err_bound"] = stats.rel_err_bound(
+        lo_t, hi_t, ep_hist.shape[1])
+    if slo_us is not None:
+        scl = np.ones(n) if slo_scale is None else np.asarray(slo_scale)
+        good = tot = 0.0
+        for c in range(n):
+            good += stats.good_count(ep_hist[c], slo_us * scl[c] * US,
+                                     lo_t, hi_t)
+            tot += float(np.asarray(ep_hist[c], np.uint64).sum())
+        out[f"slo_good_frac_{prefix.rstrip('_')}"] = \
+            good / tot if tot else float("nan")
+    return out
+
+
+def fleet_tail(cfg: SimConfig, st: SimState, slo_us=None) -> dict:
+    """Fleet-wide tail metrics from a (possibly batched / sharded)
+    sweep state: merge the streaming histograms across EVERY leading
+    axis — sweep cells, shards, devices — and all cores with one
+    sum-reduction, then reconstruct quantiles host-side.  The only host
+    transfer is the two ``[B]`` count vectors, never raw samples.
+
+    The device-side partial sum is u32 (JAX default-x64-off); each
+    merged bucket must stay < 2^32 counts, which a 5M-event-per-cell cap
+    comfortably guarantees up to ~800 cells per bucket-dominating
+    workload — the host-side final merge is u64 either way."""
+    if not cfg.hist:
+        raise ValueError("fleet_tail needs a cfg with hist=True")
+    merged = jax.jit(
+        lambda e, c: (jnp.sum(e.reshape(-1, e.shape[-1]), axis=0),
+                      jnp.sum(c.reshape(-1, c.shape[-1]), axis=0)))(
+        st.ep_hist, st.cs_hist)
+    eph, csh = (np.asarray(h, np.uint64)[None] for h in merged)
+    # Class masks don't survive the cross-core merge — fleet view only.
+    cfg1 = dataclasses.replace(cfg, n_cores=1, big=(0,),
+                               speed_cs=(1.0,), speed_nc=(1.0,))
+    out = {k: v for k, v in hist_tail(cfg1, eph, csh, slo_us).items()
+           if "_big_" not in k and "_little_" not in k}
+    return out
+
 
 def summarize(cfg: SimConfig, st: SimState, warmup: int = 32,
               n_active: int = None, slo_us: float = None) -> dict:
@@ -1664,13 +1825,19 @@ def summarize(cfg: SimConfig, st: SimState, warmup: int = 32,
     cs_cnt = np.asarray(st.cs_cnt)[:n]
     t_end = float(np.asarray(st.t)) / US
     sim_s = max(t_end, 1e-9) / 1e6
+    cap = ep_lat.shape[1]
+    wrapped = bool((ep_cnt > cap).any() or (cs_cnt > cap).any())
 
-    def collect(lat, cnt, mask):
-        vals = [
-            _ring_values(lat[c], int(cnt[c]), warmup)
-            for c in range(n) if mask[c]
-        ]
-        v = np.concatenate(vals) if vals else np.zeros(0)
+    # One O(n*cap) collection pass, shared by the percentile AND goodput
+    # paths below — the two can never disagree on the sample set.
+    ep_vals = [_ring_values(ep_lat[c], int(ep_cnt[c]), warmup)
+               for c in range(n)]
+    cs_vals = [_ring_values(cs_lat[c], int(cs_cnt[c]), warmup)
+               for c in range(n)]
+
+    def collect(vals, mask):
+        sel = [vals[c] for c in range(n) if mask[c]]
+        v = np.concatenate(sel) if sel else np.zeros(0)
         return v / US  # -> microseconds
 
     out = {
@@ -1683,11 +1850,34 @@ def summarize(cfg: SimConfig, st: SimState, warmup: int = 32,
     }
     for name, mask in (("all", np.ones_like(big)), ("big", big),
                        ("little", ~big)):
-        ep = collect(ep_lat, ep_cnt, mask)
-        cs = collect(cs_lat, cs_cnt, mask)
-        out[f"ep_p99_{name}_us"] = float(np.percentile(ep, 99)) if ep.size else float("nan")
-        out[f"ep_p50_{name}_us"] = float(np.percentile(ep, 50)) if ep.size else float("nan")
-        out[f"cs_p99_{name}_us"] = float(np.percentile(cs, 99)) if cs.size else float("nan")
+        ep = collect(ep_vals, mask)
+        cs = collect(cs_vals, mask)
+        out[f"ep_p99_{name}_us"] = stats.percentile(ep, 99)
+        out[f"ep_p50_{name}_us"] = stats.percentile(ep, 50)
+        out[f"cs_p99_{name}_us"] = stats.percentile(cs, 99)
+    if wrapped:
+        # A ring overwrote history: the exact percentiles above only see
+        # the most recent `epcap` samples (recency-biased).  The flag is
+        # emitted ONLY when it fires, so un-wrapped (e.g. golden-digest)
+        # summaries are byte-identical to pre-histogram builds.
+        out["tail_truncated"] = True
+    if cfg.hist:
+        # Streaming-histogram tail: full-history quantiles at bounded
+        # relative error, any run length (docs/simulator.md §Streaming
+        # metrics).  Keyed ep_*_hist_* alongside the ring-exact keys;
+        # when the ring wrapped, the histogram values REPLACE the
+        # primary ep/cs percentile keys — bounded error beats silently
+        # truncated history.  NOTE the histogram warmup is the traced
+        # ``cfg.hist_warmup`` (recorded on device), not this function's
+        # ``warmup`` argument.
+        eph = np.asarray(st.ep_hist, np.uint64)[:n]
+        csh = np.asarray(st.cs_hist, np.uint64)[:n]
+        out.update(hist_tail(cfg, eph, csh))
+        if wrapped:
+            for name in ("all", "big", "little"):
+                out[f"ep_p99_{name}_us"] = out[f"ep_p99_hist_{name}_us"]
+                out[f"ep_p50_{name}_us"] = out[f"ep_p50_hist_{name}_us"]
+                out[f"cs_p99_{name}_us"] = out[f"cs_p99_hist_{name}_us"]
     out["final_window_us"] = (np.asarray(st.window)[:n] / US).tolist()
     # Energy (repro.core.energy): the accumulator is in watt-ticks and
     # 1 tick = 10 ns, so 1 watt-tick = 10 nJ.  The derived efficiency
@@ -1704,13 +1894,23 @@ def summarize(cfg: SimConfig, st: SimState, warmup: int = 32,
         out["edp"] = out["energy_j"] * p50 * 1e-6 if np.isfinite(p50) \
             else float("nan")
     if slo_us is not None:
-        scl = np.asarray((tuple(cfg.slo_scale) + (1.0,) * n)[:n], float)
+        # The registered column is the one source of truth for the
+        # per-core SLO multiplier (encoding + neutral padding).
+        scl = colreg.COLUMNS["slo_scale"].np_values(cfg, n)
         good = tot = 0
         for c in range(n):
-            v = _ring_values(ep_lat[c], int(ep_cnt[c]), warmup)
+            v = ep_vals[c]  # the same samples the percentiles used
             good += int(np.sum(v / US <= slo_us * scl[c]))
             tot += v.size
         frac = good / tot if tot else 0.0
+        if cfg.hist:
+            hg = hist_tail(cfg, eph, csh, slo_us=slo_us, slo_scale=scl)
+            out["slo_good_frac_hist"] = hg["slo_good_frac_hist"]
+            if wrapped:
+                # Ring history truncated -> the ring fraction only sees
+                # the most recent epcap epochs; report the full-history
+                # histogram fraction as the primary goodput.
+                frac = out["slo_good_frac_hist"]
         out["slo_good_frac"] = frac
         out["goodput_eps"] = out["throughput_epochs_per_s"] * frac
     return out

@@ -22,6 +22,7 @@ import threading
 
 import numpy as np
 
+from repro.core import stats
 from repro.core.aimd import AIMDWindow, unit_for
 from repro.workloads.generators import straggle_uniforms
 
@@ -150,7 +151,10 @@ def simulate(n_pods: int, durations, *, controller: BoundedStalenessController,
                 try_start(q)
 
     sps = commits / max(t, 1e-12)
-    mean_st = float(np.mean(staleness_samples)) if staleness_samples else 0.0
-    p99_st = float(np.percentile(staleness_samples, 99)) \
-        if staleness_samples else 0.0
+    # Zero commits -> no staleness distribution exists: nan, not a 0.0
+    # sentinel that would read as "perfectly fresh" (repro.core.stats
+    # is the repo-wide empty-samples convention).
+    mean_st = float(np.mean(staleness_samples)) if staleness_samples \
+        else float("nan")
+    p99_st = stats.percentile(staleness_samples, 99)
     return sps, mean_st, p99_st

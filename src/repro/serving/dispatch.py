@@ -46,6 +46,7 @@ import heapq
 
 import numpy as np
 
+from repro.core import stats
 from repro.core.aimd import AIMDWindow, unit_for
 from repro.core.policies import dispatch_names
 from repro.faults import host as flt_host
@@ -350,20 +351,23 @@ def simulate_dispatch(policy: str, *, n_fast=4, n_slow=4, slow_factor=3.0,
     # exactly that warmup fraction).
     completed = len(lat)
     full_lat = lat
-    lat = np.array(lat[int(0.05 * len(lat)):] or [np.inf])
-    good = int(np.sum(np.array(full_lat or [np.inf]) <= slo)) \
+    # Zero completions -> nan percentiles (repro.core.stats), not the
+    # old [inf] sentinel that leaked inf p50/p99 into reports.
+    lat = np.array(lat[int(0.05 * len(lat)):], float)
+    good = int(np.sum(np.asarray(full_lat) <= slo)) \
         if slo is not None else None
     return {
         "policy": policy,
         "n": len(lat),
         "completed": completed,
         "throughput_rps": completed / max(clock, 1e-9),
-        "p50": float(np.percentile(lat, 50)),
-        "p99": float(np.percentile(lat, 99)),
+        "p50": stats.percentile(lat, 50),
+        "p99": stats.percentile(lat, 99),
         "served_fast": served_fast,
         "served_slow": served_slow,
         "final_window": win.window,
-        "slo_violation": float(np.mean(lat > slo)) if slo else None,
+        "slo_violation": (float(np.mean(lat > slo)) if lat.size
+                          else float("nan")) if slo else None,
         # resilience counters + goodput (SLO-met completions per second)
         "timeouts": timeouts,
         "retries": retried,

@@ -32,6 +32,7 @@ from collections import defaultdict
 
 import numpy as np
 
+from repro.core import stats
 from repro.core.asl_schedule import SCHEDULERS
 
 
@@ -273,8 +274,10 @@ class ServingEngine:
         toks = sum(r.generated for r in reqs)
         span = max(r.finish_t for r in reqs) - min(r.arrival_t for r in reqs)
         viol = np.mean([t > r.slo_ttft for t, r in zip(ttft, reqs)])
+        # No ITL samples (e.g. every request shed before a second token)
+        # -> nan percentiles below, not the old 0.0 sentinel.
         itl = np.array(self.itl_samples[int(len(self.itl_samples)
-                                            * warmup_frac):] or [0.0])
+                                            * warmup_frac):], float)
         # Goodput: completions that met their TTFT SLO — shed, expired
         # and SLO-late requests all count against it (the chaos figures'
         # useful-work-per-second metric).
@@ -283,11 +286,11 @@ class ServingEngine:
         return {
             "n": len(reqs),
             "throughput_tok_s": toks / max(span, 1e-9),
-            "ttft_p50": float(np.percentile(ttft, 50)),
-            "ttft_p99": float(np.percentile(ttft, 99)),
-            "e2e_p99": float(np.percentile(e2e, 99)),
-            "itl_p50": float(np.percentile(itl, 50)),
-            "itl_p99": float(np.percentile(itl, 99)),
+            "ttft_p50": stats.percentile(ttft, 50),
+            "ttft_p99": stats.percentile(ttft, 99),
+            "e2e_p99": stats.percentile(e2e, 99),
+            "itl_p50": stats.percentile(itl, 50),
+            "itl_p99": stats.percentile(itl, 99),
             "slo_violation_rate": float(viol),
             "goodput_req_s": len(good) / max(span, 1e-9),
             "goodput_tok_s": sum(r.generated for r in good)

@@ -26,6 +26,7 @@ import math
 
 import numpy as np
 
+from repro.core import stats
 from repro.workloads.generators import STREAM_CLASS, ServiceSpec, choice
 
 
@@ -177,8 +178,9 @@ def metrics_by_class(engine, mix: WorkloadMix,
         ttft = np.asarray([r.first_token_t - r.arrival_t for r in reqs])
         out[cls.name] = {
             "n": len(reqs),
-            "ttft_p50": float(np.percentile(ttft, 50)),
-            "ttft_p99": float(np.percentile(ttft, 99)),
+            # repro.core.stats: nan (never a raise) on zero samples.
+            "ttft_p50": stats.percentile(ttft, 50),
+            "ttft_p99": stats.percentile(ttft, 99),
             "slo_violation_rate": float(np.mean(ttft > cls.slo)),
         }
     return out

@@ -1,0 +1,300 @@
+"""Streaming-histogram layer (cfg.hist; repro.core.stats) + the ring
+warmup fixes.
+
+Covers the ISSUE-10 guarantees: merge associativity/commutativity
+(cell / shard / device orders agree bitwise), gate-off purity, the
+EPCAP-exceeding acceptance run (histogram P99 within one bucket's
+relative error of an exact large-cap reference at constant SimState
+memory), the ``tail_truncated`` flag, the ``_ring_values`` warmup
+off-by-one regression, and the shared nan-on-empty percentile helper's
+call sites.  Per-policy quantile-vs-exact conformance lives in
+tests/test_policies.py.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import simlock as sl
+from repro.core import stats
+from repro.core.policies.base import US
+
+SLO_US = 80.0
+
+
+def _cfg(**kw):
+    kw.setdefault("policy", "libasl")
+    kw.setdefault("sim_time_us", 3_000.0)
+    return sl.SimConfig(hist=True, **kw)
+
+
+# ---------------------------------------------------------------------------
+# stats unit behavior
+# ---------------------------------------------------------------------------
+
+def test_percentile_empty_is_nan_not_raise():
+    assert np.isnan(stats.percentile([], 99))
+    assert np.isnan(stats.percentile(np.zeros(0), 50))
+    assert stats.percentile([3.0], 99) == 3.0
+
+
+def test_quantile_empty_is_nan():
+    assert np.isnan(stats.quantile(np.zeros(64, np.uint32), 99, 1.0, 1e4))
+
+
+def test_quantile_within_bound_of_exact():
+    rng = np.random.default_rng(7)
+    v = rng.lognormal(3.0, 1.0, 100_000)
+    lo, hi, b = 0.1, 1e6, 512
+    log2lo, invlog2g = stats.layout(lo, hi, b)
+    idx = np.clip(1 + np.floor((np.log2(v) - log2lo)
+                               * invlog2g).astype(int), 0, b - 1)
+    h = np.bincount(idx, minlength=b)
+    bound = stats.rel_err_bound(lo, hi, b)
+    for q in (50.0, 99.0, 99.9):
+        exact = np.percentile(v, q)
+        est = stats.quantile(h, q, lo, hi)
+        assert abs(est - exact) <= bound * exact
+
+
+def test_good_count_tracks_exact():
+    rng = np.random.default_rng(11)
+    v = rng.lognormal(2.0, 0.8, 50_000)
+    lo, hi, b = 0.1, 1e5, 512
+    log2lo, invlog2g = stats.layout(lo, hi, b)
+    idx = np.clip(1 + np.floor((np.log2(v) - log2lo)
+                               * invlog2g).astype(int), 0, b - 1)
+    h = np.bincount(idx, minlength=b)
+    for thr in (2.0, 10.0, 50.0):
+        exact = int((v <= thr).sum())
+        est = stats.good_count(h, thr, lo, hi)
+        # off by at most one bucket's contents
+        edge = np.searchsorted(stats.edges(lo, hi, b), thr)
+        assert abs(est - exact) <= h[edge] + 1
+
+
+def test_merge_orders_agree_bitwise():
+    """cell + shard + device merge orders are all plain u64 sums —
+    bitwise identical no matter the grouping or ordering."""
+    rng = np.random.default_rng(3)
+    hists = rng.integers(0, 2**31, (12, 64)).astype(np.uint32)
+    flat = stats.merge(hists)
+    by_cell = stats.merge([stats.merge(hists[i::3]) for i in range(3)])
+    by_shard = stats.merge([stats.merge(hists[i:i + 4])
+                            for i in (8, 0, 4)])
+    reversed_ = stats.merge(hists[::-1])
+    for other in (by_cell, by_shard, reversed_):
+        np.testing.assert_array_equal(flat, other)
+    assert flat.dtype == np.uint64
+
+
+# ---------------------------------------------------------------------------
+# _ring_values warmup regression (satellite 1)
+# ---------------------------------------------------------------------------
+
+def test_ring_values_low_count_is_empty():
+    """cnt <= warmup must yield ZERO samples — the old slice kept
+    exactly one warmup-contaminated sample."""
+    buf = np.arange(100, dtype=np.float32)
+    for cnt in (0, 1, 31, 32):
+        assert sl._ring_values(buf, cnt, warmup=32).size == 0
+    got = sl._ring_values(buf, 33, warmup=32)
+    np.testing.assert_array_equal(got, [32.0])
+
+
+def test_ring_values_unwrapped_unchanged_past_warmup():
+    buf = np.arange(100, dtype=np.float32)
+    np.testing.assert_array_equal(sl._ring_values(buf, 50, warmup=32),
+                                  np.arange(32, 50, dtype=np.float32))
+
+
+def test_ring_values_wrapped_trims_surviving_warmup():
+    """Ring wrapped but not far enough to evict all warmup samples:
+    the survivors must be trimmed (samples cap..cnt are kept)."""
+    cap, cnt, warmup = 100, 110, 32
+    buf = np.empty(cap, np.float32)
+    for i in range(cnt):           # sample i has value i
+        buf[i % cap] = i
+    got = sl._ring_values(buf, cnt, warmup)
+    # samples 10..109 survive in the ring; 10..31 are still warmup
+    np.testing.assert_array_equal(got, np.arange(32, 110, dtype=np.float32))
+
+
+def test_ring_values_wrapped_past_warmup_keeps_all():
+    cap, cnt = 100, 500
+    buf = np.arange(cap, dtype=np.float32)
+    assert sl._ring_values(buf, cnt, 32).size == cap
+
+
+# ---------------------------------------------------------------------------
+# Engine: gate-off purity, EPCAP-exceeding acceptance, truncation flag
+# ---------------------------------------------------------------------------
+
+def test_gate_off_summary_has_no_hist_keys():
+    cfg = sl.SimConfig(policy="libasl", sim_time_us=2_000.0)
+    s = sl.summarize(cfg, sl.run(cfg, SLO_US, seed=3), slo_us=SLO_US)
+    assert not any("hist" in k for k in s)
+    assert "tail_truncated" not in s
+
+
+def test_epcap_exceeded_reports_histogram_tail():
+    """The acceptance run: >= 32x cap epochs through a tiny ring.  The
+    wrapped run's primary ep_p99_all_us must come from the histogram
+    and land within one bucket's relative error of an exact large-cap
+    reference — while its SimState latency memory stays constant."""
+    small = _cfg(epcap=64, sim_time_us=40_000.0)
+    large = dataclasses.replace(small, epcap=8192)
+    st_s = sl.run(small, SLO_US, seed=3)
+    st_l = sl.run(large, SLO_US, seed=3)
+    total = int(np.asarray(st_s.ep_cnt).sum())
+    assert total >= 32 * small.epcap
+    # ring size never feeds back into the dynamics: same trajectory
+    np.testing.assert_array_equal(np.asarray(st_s.ep_cnt),
+                                  np.asarray(st_l.ep_cnt))
+    np.testing.assert_array_equal(np.asarray(st_s.ep_hist),
+                                  np.asarray(st_l.ep_hist))
+    s_small = sl.summarize(small, st_s, slo_us=SLO_US)
+    s_large = sl.summarize(large, st_l, slo_us=SLO_US)
+    assert s_small.get("tail_truncated") is True
+    assert "tail_truncated" not in s_large
+    bound = s_small["hist_rel_err_bound"]
+    exact = s_large["ep_p99_all_us"]          # un-wrapped: ring-exact
+    got = s_small["ep_p99_all_us"]            # wrapped: histogram-backed
+    assert got == s_small["ep_p99_hist_all_us"]
+    assert abs(got - exact) <= bound * exact
+    # constant memory: latency state is epcap-shaped rings + fixed hists
+    assert st_s.ep_lat.shape == (8, 64)
+    assert st_s.ep_hist.shape == st_l.ep_hist.shape == (8, 512)
+    # goodput switches to the full-history histogram fraction too
+    assert s_small["slo_good_frac"] == s_small["slo_good_frac_hist"]
+    assert abs(s_small["slo_good_frac"] - s_large["slo_good_frac"]) < 0.05
+
+
+def test_summarize_goodput_and_percentiles_share_samples():
+    """Satellite 2: one collection pass — a core whose count sits at or
+    below warmup contributes to NEITHER metric (the old second pass
+    could disagree with the percentile pass)."""
+    cfg = sl.SimConfig(policy="fifo", sim_time_us=2_000.0)
+    st = sl.run(cfg, SLO_US, seed=3)
+    n = cfg.n_cores
+    ep_lat = np.asarray(st.ep_lat)[:n]
+    ep_cnt = np.asarray(st.ep_cnt)[:n]
+    vals = np.concatenate([sl._ring_values(ep_lat[c], int(ep_cnt[c]), 32)
+                           for c in range(n)]) / US
+    s = sl.summarize(cfg, st, slo_us=SLO_US)
+    assert s["slo_good_frac"] == float(np.mean(vals <= SLO_US))
+    assert s["ep_p99_all_us"] == stats.percentile(vals, 99)
+
+
+# ---------------------------------------------------------------------------
+# Merging across sweep cells, shards and devices
+# ---------------------------------------------------------------------------
+
+def test_sweep_cells_merge_matches_single_runs():
+    """Per-cell histograms from one batched executable merge (sum) to
+    exactly the union of the dedicated single runs' histograms."""
+    cfg = _cfg()
+    st, grid = sl.sweep(cfg, {"seed": [0, 3, 5]}, slo_us=SLO_US)
+    singles = [np.asarray(sl.run(cfg, SLO_US, seed=s).ep_hist)
+               for s in (0, 3, 5)]
+    np.testing.assert_array_equal(
+        stats.merge(np.asarray(st.ep_hist)),
+        stats.merge([stats.merge(h) for h in singles]))
+
+
+def test_sharded_hist_bit_parity():
+    """Sharding the cell axis must not move one histogram count."""
+    from repro.launch.mesh import make_sweep_mesh
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >1 (virtual) device")
+    cfg = _cfg()
+    axes = {"seed": [0, 1, 2]}
+    a, _ = sl.sweep(cfg, axes, slo_us=SLO_US)
+    b, _ = sl.sweep(cfg, axes, slo_us=SLO_US, mesh=make_sweep_mesh())
+    np.testing.assert_array_equal(np.asarray(a.ep_hist),
+                                  np.asarray(b.ep_hist))
+    np.testing.assert_array_equal(np.asarray(a.cs_hist),
+                                  np.asarray(b.cs_hist))
+
+
+def test_fleet_tail_merges_everything():
+    cfg = _cfg()
+    st, _ = sl.sweep(cfg, {"seed": [0, 3]}, slo_us=SLO_US)
+    fleet = sl.fleet_tail(cfg, st, slo_us=SLO_US)
+    merged = stats.merge(np.asarray(st.ep_hist))
+    lo_t, hi_t = cfg.hist_lo_us * US, cfg.hist_hi_us * US
+    want = stats.quantile(merged, 99, lo_t, hi_t) / US
+    assert fleet["ep_p99_hist_all_us"] == pytest.approx(want, rel=1e-6)
+    assert 0.0 <= fleet["slo_good_frac_hist"] <= 1.0
+    with pytest.raises(ValueError):
+        sl.fleet_tail(sl.SimConfig(), st)
+
+
+def test_hist_axes_share_one_executable():
+    """Bucket range and warmup ride traced: configs differing only in
+    them (and gate-off bucket counts) must share the jit key."""
+    a = sl._canon(_cfg())
+    b = sl._canon(_cfg(hist_lo_us=0.5, hist_hi_us=1e5, hist_warmup=7))
+    assert a == b
+    off_a = sl._canon(sl.SimConfig(policy="libasl"))
+    off_b = sl._canon(sl.SimConfig(policy="libasl", hist_buckets=64))
+    assert off_a == off_b
+    # but the gate bit and the gate-on bucket count ARE the jit key
+    assert sl._canon(_cfg()) != sl._canon(_cfg(hist_buckets=64))
+    assert off_a != a
+
+
+def test_hist_config_validation():
+    with pytest.raises(ValueError):
+        sl.SimConfig(hist_buckets=2)
+    with pytest.raises(ValueError):
+        sl.SimConfig(hist_lo_us=0.0)
+    with pytest.raises(ValueError):
+        sl.SimConfig(hist_lo_us=10.0, hist_hi_us=1.0)
+    with pytest.raises(ValueError):
+        sl.SimConfig(hist_warmup=-1)
+
+
+# ---------------------------------------------------------------------------
+# Satellite 3: nan-on-empty at the external call sites
+# ---------------------------------------------------------------------------
+
+def test_staleness_zero_commits_reports_nan():
+    from repro.dist.staleness import BoundedStalenessController, simulate
+    ctl = BoundedStalenessController(2, window_steps=1.0)
+    sps, mean_st, p99_st = simulate(2, [1.0, 1.0], controller=ctl,
+                                    horizon_steps=0)
+    assert sps == 0.0
+    assert np.isnan(mean_st) and np.isnan(p99_st)
+
+
+def test_engine_metrics_no_itl_samples_is_nan():
+    from repro.serving.engine import Request, ServingEngine
+    eng = ServingEngine()
+    # one completed request, zero decode intervals: ttft is real but the
+    # ITL distribution is empty -> nan, not the old 0.0 sentinel
+    eng.done.append(Request(rid=0, arrival_t=0.0, prompt_len=8,
+                            max_new_tokens=1, slo_ttft=1.0,
+                            first_token_t=0.5, finish_t=0.5, generated=1))
+    m = eng.metrics(warmup_frac=0.0)
+    assert m["n"] == 1 and m["ttft_p50"] == 0.5
+    assert np.isnan(m["itl_p50"]) and np.isnan(m["itl_p99"])
+
+
+def test_clients_and_dispatch_use_shared_helper():
+    from repro.serving import dispatch as dsp
+    from repro.serving import engine as eng
+    from repro.workloads import clients as cl
+    assert cl.stats is stats and dsp.stats is stats and eng.stats is stats
+
+
+def test_dispatch_empty_latencies_report_nan():
+    from repro.serving.dispatch import simulate_dispatch
+    # duration too short for any arrival: zero completions
+    res = simulate_dispatch("fair", duration_s=1e-9, rate_rps=1.0,
+                            slo=1.0, seed=0)
+    assert res["n"] == 0
+    assert np.isnan(res["p50"]) and np.isnan(res["p99"])
+    assert np.isnan(res["slo_violation"])

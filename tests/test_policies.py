@@ -155,7 +155,10 @@ def test_shfl_bound_trades_latency_for_throughput():
     n0 = sl.n_batch_executables()
     st, grid = sl.sweep(cfg, {"shfl_bound": [0, 4, 64]})
     assert sl.n_batch_executables() - n0 <= 1
-    rows = sl.sweep_summaries(cfg, st, grid)
+    # warmup=8: at bound 64 the starved little cores retire fewer than
+    # the default 32 warmup samples — the fixed _ring_values correctly
+    # reports an empty (nan) tail there, so trim less for this check.
+    rows = sl.sweep_summaries(cfg, st, grid, warmup=8)
     fifo = sl.summarize(cfg, sl.run(_cfg("fifo", sim_time_us=10_000.0),
                                     1e9))
     assert rows[0]["throughput_cs_per_s"] == pytest.approx(
@@ -483,3 +486,59 @@ def test_race_w_zero_still_live():
                           race_w=(0.0,) * 8)
     st = sl.run(cfg, SLO_US)
     assert (np.asarray(st.ep_cnt) > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Streaming histograms (cfg.hist) — conformance for every policy
+# ---------------------------------------------------------------------------
+
+def _hist_runs(policy):
+    cfg_off = _cfg(policy, sim_time_us=3_000.0)
+    cfg_on = dataclasses.replace(cfg_off, hist=True)
+    return (cfg_off, sl.run(cfg_off, SLO_US, seed=3),
+            cfg_on, sl.run(cfg_on, SLO_US, seed=3))
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_hist_gate_is_passive(policy):
+    """Flipping the histogram gate on must not move one bit of any
+    pre-existing state leaf (recording is purely additive), and
+    gate-off leaves the hist leaves minimal and untouched."""
+    _, off, _, on = _hist_runs(policy)
+    for f in off._fields:
+        if f in ("ep_hist", "cs_hist"):
+            continue
+        a, b = getattr(off, f), getattr(on, f)
+        if isinstance(a, dict):
+            for k in a:
+                np.testing.assert_array_equal(
+                    np.asarray(a[k]), np.asarray(b[k]), err_msg=f"{f}.{k}")
+        else:
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b), err_msg=f)
+    assert off.ep_hist.shape[1] == 1 and not np.asarray(off.ep_hist).any()
+    assert on.ep_hist.shape[1] == sl.SimConfig().hist_buckets
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_hist_quantile_within_bound(policy):
+    """On an un-wrapped run the histogram quantiles must sit within the
+    documented one-bucket relative-error bound of the exact ring
+    percentiles, per core class, for every registered policy (the
+    device warmup gate defaults to summarize's ring warmup, so the two
+    paths see the same sample set)."""
+    _, _, cfg_on, on = _hist_runs(policy)
+    assert (np.asarray(on.ep_cnt) <= cfg_on.epcap).all()  # un-wrapped
+    s = sl.summarize(cfg_on, on, slo_us=SLO_US)
+    bound = s["hist_rel_err_bound"]
+    for fam in ("ep_p99", "ep_p50", "cs_p99"):
+        for cls in ("all", "big", "little"):
+            exact = s[f"{fam}_{cls}_us"]
+            est = s[f"{fam}_hist_{cls}_us"]
+            if np.isnan(exact):
+                assert np.isnan(est), (fam, cls)
+                continue
+            assert abs(est - exact) <= bound * exact + 1e-9, \
+                (fam, cls, est, exact, bound)
+    # Histogram goodput within one bucket's mass of the exact fraction.
+    assert abs(s["slo_good_frac_hist"] - s["slo_good_frac"]) < 0.05
